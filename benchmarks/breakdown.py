@@ -1,0 +1,54 @@
+"""Paper Fig. 13: speedup breakdown by incrementally enlarging the search
+space (Megatron baseline -> +CKPT -> +ZeRO -> +offload -> full Mist ->
++imbalance awareness), GPT on 8/16/32 chips, normalized to the Megatron
+space."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import FAST_TUNE, emit, gpt_config, train_shape
+from repro.core.tuner import tune
+
+STEPS = ("megatron", "ckpt", "zero", "offload", "mist")
+
+
+def run(size: str = "6.7b", dev_counts=(8, 16, 32), gbs: int = 128
+        ) -> List[str]:
+    rows = []
+    for n_dev in dev_counts:
+        cfg = gpt_config(size)
+        shape = train_shape(gbs, seq=2048)
+        base = None
+        for space in STEPS:
+            t0 = time.perf_counter()
+            rep = tune(cfg, shape, n_dev, space=space, **FAST_TUNE)
+            dt = (time.perf_counter() - t0) * 1e6
+            if rep.plan is None:
+                rows.append(emit(f"breakdown/{n_dev}dev/{space}", dt, "OOM"))
+                continue
+            if base is None:
+                base = rep.objective
+            rows.append(emit(
+                f"breakdown/{n_dev}dev/{space}", dt,
+                f"rel_speedup={base / rep.objective:.3f}x "
+                f"thpt={rep.throughput_samples:.2f}samp/s"))
+        # imbalance-awareness ablation on the full space
+        t0 = time.perf_counter()
+        blind = tune(cfg, shape, n_dev, space="mist",
+                     imbalance_aware=False, **FAST_TUNE)
+        dt = (time.perf_counter() - t0) * 1e6
+        if blind.plan is not None and base is not None:
+            # evaluate the blind plan under the true (imbalance-aware) model
+            from repro.core.costmodel import estimate_plan
+            t_blind = estimate_plan(cfg, shape, blind.plan)["t_step"]
+            rows.append(emit(
+                f"breakdown/{n_dev}dev/mist-imbalance-blind", dt,
+                f"rel_speedup={base / t_blind:.3f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Shared benchmark machinery: the paper's GPT/LLaMa workload family
+(Table 4 sizes), CSV emission, and timing helpers."""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+# paper Table 4 model family: [1.3, 2.6, 6.7, 13, 22] B params
+_GPT_DIMS = {
+    "1.3b": dict(num_layers=24, d_model=2048, num_heads=16, d_ff=8192),
+    "2.6b": dict(num_layers=32, d_model=2560, num_heads=20, d_ff=10240),
+    "6.7b": dict(num_layers=32, d_model=4096, num_heads=32, d_ff=16384),
+    "13b": dict(num_layers=40, d_model=5120, num_heads=40, d_ff=20480),
+    "22b": dict(num_layers=48, d_model=6144, num_heads=48, d_ff=24576),
+}
+
+
+def gpt_config(size: str) -> ArchConfig:
+    """GPT-3-style decoder (paper's primary workload): LN, GELU, ungated."""
+    d = _GPT_DIMS[size]
+    return ArchConfig(
+        name=f"gpt3-{size}", family="dense", vocab_size=50257,
+        num_kv_heads=d["num_heads"], norm_type="layernorm", act="gelu",
+        mlp_gated=False, qkv_bias=False, **d)
+
+
+def llama_config(size: str) -> ArchConfig:
+    """LLaMa-style: RMSNorm + SwiGLU (2/3 d_ff rule) + RoPE."""
+    d = dict(_GPT_DIMS[size])
+    d["d_ff"] = int(d["d_ff"] * 2 // 3 // 256 * 256)
+    return ArchConfig(
+        name=f"llama-{size}", family="dense", vocab_size=32000,
+        num_kv_heads=d["num_heads"], norm_type="rmsnorm", act="silu",
+        mlp_gated=True, **d)
+
+
+def train_shape(global_batch: int, seq: int = 4096) -> ShapeConfig:
+    return ShapeConfig(f"b{global_batch}", seq, global_batch, "train")
+
+
+# paper practice: scale batch and chips with model size
+PAPER_CELLS: List[Tuple[str, int, int]] = [
+    # (size, n_devices, global_batch)
+    ("1.3b", 8, 32),
+    ("2.6b", 16, 64),
+    ("6.7b", 32, 128),
+    ("13b", 64, 256),
+    ("22b", 128, 512),
+]
+
+
+@contextmanager
+def timed(out: Dict[str, float], key: str):
+    t0 = time.perf_counter()
+    yield
+    out[key] = time.perf_counter() - t0
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> str:
+    row = f"{name},{us_per_call:.3f},{derived}"
+    print(row)
+    return row
+
+
+FAST_TUNE = dict(stage_counts=(1, 2, 4), grad_accums=(2, 4, 8, 16))

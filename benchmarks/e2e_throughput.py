@@ -1,0 +1,56 @@
+"""Paper Fig. 11/12 analogue: end-to-end (modeled) training throughput of
+the Mist plan vs Megatron-style / DeepSpeed-style / Aceso-style restricted
+search spaces, across model sizes and chip counts, for GPT and LLaMa
+families.
+
+The paper measures wall-clock on L4/A100 clusters; this container has no
+TPU, so throughput is the cost model's Eq. 1 estimate for the TPU-v5e
+target — the *relative* speedups are the reproduced quantity (paper C1:
+Mist >= 1 vs every restricted space, avg 1.27-1.28x vs the strongest)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import (FAST_TUNE, PAPER_CELLS, emit, gpt_config,
+                               llama_config, train_shape)
+from repro.core.tuner import tune
+
+SPACES = ("megatron", "zero", "ckpt", "mist")
+
+
+def run(cells=PAPER_CELLS[:4], families=("gpt", "llama")) -> List[str]:
+    rows = []
+    speedups = {s: [] for s in SPACES}
+    for fam in families:
+        make = gpt_config if fam == "gpt" else llama_config
+        for size, n_dev, gbs in cells:
+            cfg = make(size)
+            shape = train_shape(gbs, seq=2048)
+            thpt = {}
+            for space in SPACES:
+                t0 = time.perf_counter()
+                rep = tune(cfg, shape, n_dev, space=space, **FAST_TUNE)
+                dt = (time.perf_counter() - t0) * 1e6
+                thpt[space] = rep.throughput_samples if rep.plan else 0.0
+                rows.append(emit(
+                    f"e2e/{fam}-{size}/{n_dev}dev/{space}", dt,
+                    f"thpt={thpt[space]:.2f}samp/s"
+                    + ("" if rep.plan else " OOM")))
+            best_restricted = max(thpt[s] for s in SPACES if s != "mist")
+            if best_restricted > 0:
+                sp = thpt["mist"] / best_restricted
+                speedups["mist"].append(sp)
+                rows.append(emit(
+                    f"e2e/{fam}-{size}/{n_dev}dev/speedup", 0.0,
+                    f"mist_vs_best_restricted={sp:.3f}x"))
+    if speedups["mist"]:
+        g = float(np.exp(np.mean(np.log(speedups["mist"]))))
+        rows.append(emit("e2e/geomean_speedup", 0.0, f"{g:.3f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

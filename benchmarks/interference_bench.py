@@ -1,0 +1,49 @@
+"""Paper Alg. 1 benchmark: batched interference estimation throughput and
+fit quality (synthetic calibration, mirroring the paper's data-driven
+factor fitting)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.interference import InterferenceModel
+
+
+def run(n: int = 200_000) -> List[str]:
+    rows = []
+    m = InterferenceModel()
+    rng = np.random.default_rng(0)
+    ch = rng.uniform(0.0, 5.0, size=(n, 4))
+    ch[rng.uniform(size=(n, 4)) < 0.35] = 0.0
+    # warm + time batched prediction
+    m.predict(ch[:100, 0], ch[:100, 1], ch[:100, 2], ch[:100, 3])
+    t0 = time.perf_counter()
+    out = m.predict(ch[:, 0], ch[:, 1], ch[:, 2], ch[:, 3])
+    dt = time.perf_counter() - t0
+    rows.append(emit("interference/batched_predict", dt / n * 1e6,
+                     f"n={n} total_s={dt:.3f}"))
+
+    # fit quality: perturb factors, re-fit from 32 samples
+    true = InterferenceModel()
+    for k in true.factors:
+        true.factors[k] = tuple(f * rng.uniform(0.95, 1.15)
+                                for f in true.factors[k])
+    samples = []
+    for _ in range(32):
+        c = rng.uniform(0.0, 4.0, size=4)
+        c[rng.uniform(size=4) < 0.4] = 0.0
+        samples.append((tuple(c), float(true.predict(*c))))
+    fit = InterferenceModel()
+    t0 = time.perf_counter()
+    err = fit.calibrate(samples)
+    dt = time.perf_counter() - t0
+    rows.append(emit("interference/calibrate", dt * 1e6,
+                     f"post_fit_rel_err={err:.2%}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Paper Fig. 2 + Fig. 3 (motivation): tuning parallelism alone OOMs or
+under-performs; each memory optimization co-tuned with parallelism helps;
+comprehensive co-optimization wins.
+
+GPT-2.6B on 4 chips (Fig. 2 analogue) and GPT-6.7B on 8 chips (Fig. 3
+analogue), modeled for the TPU-v5e target.  Prints one row per search space
+with the chosen plan — the speedup structure mirrors the paper's
+(parallelism-only infeasible/slow -> +CKPT -> +ZeRO -> +offload -> co-opt).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import emit, gpt_config, train_shape, FAST_TUNE
+from repro.core.tuner import tune
+
+# "none": parallelism only (no memory optimization at all) — Fig. 2(a)
+SPACES = ("none", "megatron", "ckpt", "zero", "offload", "mist")
+
+
+def run(sizes=(("2.6b", 4, 8), ("6.7b", 8, 512))) -> List[str]:
+    rows = []
+    for size, n_dev, gbs in sizes:
+        cfg = gpt_config(size)
+        shape = train_shape(gbs, seq=4096 if size == "2.6b" else 2048)
+        base = None
+        for space in SPACES:
+            t0 = time.perf_counter()
+            rep = tune(cfg, shape, n_dev, space=space, **FAST_TUNE)
+            dt = (time.perf_counter() - t0) * 1e6
+            if rep.plan is None:
+                rows.append(emit(f"motivation/{size}/{space}", dt, "OOM"))
+                continue
+            if base is None and space == "megatron":
+                base = rep.objective
+            sp = (base / rep.objective) if base else 1.0
+            s0 = rep.plan.stages[0]
+            desc = (f"thpt={rep.throughput_samples:.2f}samp/s "
+                    f"speedup={sp:.2f}x S={rep.best_S} G={rep.best_G} "
+                    f"dp={s0.dp} tp={s0.tp} z={s0.zero} "
+                    f"ckpt={min(s0.ckpt_layers, s0.layers)}/{s0.layers} "
+                    f"oo={s0.oo:.2f} ao={s0.ao:.2f}")
+            rows.append(emit(f"motivation/{size}/{space}", dt, desc))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,86 @@
+"""Render the §Dry-run / §Roofline markdown tables from results/dryrun JSONs
+and patch them into EXPERIMENTS.md placeholders.
+
+    PYTHONPATH=src python -m benchmarks.report
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+from typing import List, Optional
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+RESULTS = ROOT / "results" / "dryrun"
+
+ARCH_ORDER = ["zamba2-2.7b", "qwen2-72b", "minicpm3-4b", "granite-3-8b",
+              "qwen1.5-32b", "dbrx-132b", "qwen2-moe-a2.7b", "xlstm-1.3b",
+              "internvl2-1b", "whisper-small"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _cells(mesh: str, tag: str = "") -> List[dict]:
+    out = []
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            p = RESULTS / f"{arch}_{shape}_{mesh}{tag}.json"
+            if p.exists():
+                out.append(json.loads(p.read_text()))
+    return out
+
+
+def table(mesh: str, tag: str = "") -> str:
+    rows = ["| arch | shape | t_comp (s) | t_mem art/TPU (s) | "
+            "t_coll art/TPU (s) | bottleneck | frac art/TPU | useful | "
+            "GiB/chip art/TPU | fits | compile (s) |",
+            "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for rec in _cells(mesh, tag):
+        if rec.get("skipped"):
+            continue
+        if not rec.get("ok"):
+            rows.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                        f"FAILED | — | — | — | — | — |")
+            continue
+        r = rec["roofline"]
+        m = rec["memory"]
+        an = m.get("analytic_bytes")
+        fits = m.get("fits_16GiB_analytic", m["fits_16GiB"])
+        tm_t = r.get("t_memory_analytic")
+        tc_t = r.get("t_collective_tpu")
+        fr_t = r.get("roofline_fraction_tpu")
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {r['t_compute']:.2f} | "
+            f"{r['t_memory']:.2f}/"
+            + (f"{tm_t:.2f}" if tm_t is not None else "—") + " | "
+            f"{r['t_collective']:.2f}/"
+            + (f"{tc_t:.2f}" if tc_t is not None else "—") + " | "
+            f"{r['bottleneck']} | {r['roofline_fraction']:.3f}/"
+            + (f"{fr_t:.3f}" if fr_t is not None else "—") + " | "
+            f"{r['useful_ratio']:.2f} | "
+            f"{m['device_total_bytes'] / 2**30:.1f}/"
+            + (f"{an / 2**30:.1f}" if an else "—")
+            + f" | {'✓' if fits else '✗'} | {rec['compile_s']:.0f} |")
+    n = len([r for r in _cells(mesh, tag) if r.get("ok")])
+    nskip = len([r for r in _cells(mesh, tag) if r.get("skipped")])
+    rows.append("")
+    rows.append(f"({n} compiled cells + {nskip} spec-mandated skips on "
+                f"mesh {mesh}{' tag ' + tag if tag else ''})")
+    return "\n".join(rows)
+
+
+def patch_experiments() -> None:
+    exp = ROOT / "EXPERIMENTS.md"
+    text = exp.read_text()
+    for marker, mesh in (("<!-- ROOFLINE_TABLE_SP -->", "16x16"),
+                         ("<!-- ROOFLINE_TABLE_MP -->", "2x16x16")):
+        tbl = table(mesh)
+        block = f"{marker}\n{tbl}"
+        # replace marker + any previously generated table after it
+        pat = re.escape(marker) + r"(\n\|.*?\n\n\(\d+ compiled[^\n]*\))?"
+        text = re.sub(pat, block, text, count=1, flags=re.S)
+    exp.write_text(text)
+    print("EXPERIMENTS.md tables updated")
+
+
+if __name__ == "__main__":
+    patch_experiments()

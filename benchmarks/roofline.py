@@ -1,0 +1,56 @@
+"""§Roofline deliverable: the 3-term roofline table for every compiled
+(arch x shape x mesh) dry-run cell, read from results/dryrun/*.json."""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import List, Optional
+
+from benchmarks.common import emit
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load_cells(mesh: Optional[str] = None, tag: str = "") -> List[dict]:
+    cells = []
+    for p in sorted(RESULTS.glob(f"*{tag}.json")):
+        rec = json.loads(p.read_text())
+        if not rec.get("ok"):
+            continue
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        cells.append(rec)
+    return cells
+
+
+def run() -> List[str]:
+    rows = []
+    cells = load_cells()
+    for rec in cells:
+        r = rec["roofline"]
+        mem = rec["memory"]
+        rows.append(emit(
+            f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}",
+            rec.get("compile_s", 0.0) * 1e6,
+            f"t_comp={r['t_compute']:.3f}s t_mem={r['t_memory']:.3f}s "
+            f"t_coll={r['t_collective']:.3f}s "
+            f"bottleneck={r['bottleneck']} "
+            f"roofline_frac={r['roofline_fraction']:.3f} "
+            f"useful={r['useful_ratio']:.2f} "
+            f"dev={mem['device_total_bytes'] / 2**30:.2f}GiB "
+            f"fits={mem['fits_16GiB']}"))
+    if not cells:
+        rows.append(emit("roofline/none", 0.0,
+                         "no dry-run artifacts; run repro.launch.dryrun"))
+    else:
+        worst = min(cells,
+                    key=lambda c: c["roofline"]["roofline_fraction"])
+        rows.append(emit(
+            "roofline/worst_cell", 0.0,
+            f"{worst['arch']}/{worst['shape']}/{worst['mesh']} "
+            f"frac={worst['roofline']['roofline_fraction']:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

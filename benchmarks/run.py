@@ -1,0 +1,84 @@
+"""Benchmark runner: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only motivation,roofline
+    PYTHONPATH=src python -m benchmarks.run --fast     # trimmed sweeps
+
+Prints ``name,us_per_call,derived`` CSV rows (one per measurement)."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+SECTIONS = ("interference", "tuning_time", "motivation", "breakdown",
+            "e2e", "scale", "accuracy", "roofline")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(SECTIONS))
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else set(SECTIONS)
+
+    print("name,us_per_call,derived")
+    t_all = time.time()
+    failures = 0
+
+    def section(name, fn):
+        nonlocal failures
+        if name not in only:
+            return
+        t0 = time.time()
+        try:
+            fn()
+            print(f"{name}/__elapsed,{(time.time() - t0) * 1e6:.0f},ok")
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name}/__elapsed,{(time.time() - t0) * 1e6:.0f},FAILED")
+
+    from benchmarks import (accuracy, breakdown, e2e_throughput,
+                            interference_bench, motivation, roofline,
+                            scale_sweep, tuning_time)
+
+    section("interference", interference_bench.run)
+    section("tuning_time",
+            (lambda: tuning_time.run_tuning_time("6.7b", 16, 32)
+             + tuning_time.run_batch_speedup()) if args.fast
+            else tuning_time.run)
+    section("motivation",
+            (lambda: motivation.run(ssizes_fast())) if args.fast
+            else motivation.run)
+    section("breakdown",
+            (lambda: breakdown.run("2.6b", (8, 16), 32)) if args.fast
+            else breakdown.run)
+    section("e2e",
+            (lambda: e2e_throughput.run(cells_fast(), ("gpt",)))
+            if args.fast else e2e_throughput.run)
+    section("scale",
+            (lambda: scale_sweep.run_depth((16, 32), 16, 32)
+             + scale_sweep.run_batch((32, 128), 16, "6.7b"))
+            if args.fast else scale_sweep.run)
+    section("accuracy", accuracy.run)
+    section("roofline", roofline.run)
+
+    print(f"__total,{(time.time() - t_all) * 1e6:.0f},"
+          f"failures={failures}")
+    return 1 if failures else 0
+
+
+def ssizes_fast():
+    return (("2.6b", 4, 8),)
+
+
+def cells_fast():
+    return [("1.3b", 8, 32), ("2.6b", 16, 64)]
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,64 @@
+"""Paper Fig. 14 (model-depth sweep) + Fig. 15 (global-batch sweep):
+robustness of the co-optimization win across scales, GPT-22B-class on 32
+chips (Fig. 15) and depth-varied GPT on 32 chips (Fig. 14)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import FAST_TUNE, emit, gpt_config, train_shape
+from repro.core.tuner import tune
+
+
+def run_depth(depths=(16, 32, 48, 64, 80), n_dev: int = 32, gbs: int = 64
+              ) -> List[str]:
+    rows = []
+    for L in depths:
+        cfg = gpt_config("6.7b").replace(name=f"gpt3-{L}L", num_layers=L)
+        shape = train_shape(gbs, seq=2048)
+        res = {}
+        for space in ("megatron", "ckpt", "mist"):
+            t0 = time.perf_counter()
+            rep = tune(cfg, shape, n_dev, space=space, **FAST_TUNE)
+            dt = (time.perf_counter() - t0) * 1e6
+            res[space] = rep.objective if rep.plan else float("inf")
+            rows.append(emit(
+                f"scale/depth{L}/{space}", dt,
+                f"thpt={rep.throughput_samples:.2f}samp/s"
+                if rep.plan else "OOM"))
+        if res["megatron"] < float("inf"):
+            rows.append(emit(
+                f"scale/depth{L}/speedup", 0.0,
+                f"mist_vs_megatron={res['megatron'] / res['mist']:.3f}x"))
+    return rows
+
+
+def run_batch(batches=(32, 64, 128, 256, 512), n_dev: int = 32,
+              size: str = "13b") -> List[str]:
+    rows = []
+    for gbs in batches:
+        cfg = gpt_config(size)
+        shape = train_shape(gbs, seq=2048)
+        res = {}
+        for space in ("megatron", "mist"):
+            t0 = time.perf_counter()
+            rep = tune(cfg, shape, n_dev, space=space, **FAST_TUNE)
+            dt = (time.perf_counter() - t0) * 1e6
+            res[space] = rep.objective if rep.plan else float("inf")
+            rows.append(emit(
+                f"scale/batch{gbs}/{space}", dt,
+                f"thpt={rep.throughput_samples:.2f}samp/s"
+                if rep.plan else "OOM"))
+        if res["megatron"] < float("inf") and res["mist"] < float("inf"):
+            rows.append(emit(
+                f"scale/batch{gbs}/speedup", 0.0,
+                f"mist_vs_megatron={res['megatron'] / res['mist']:.3f}x"))
+    return rows
+
+
+def run() -> List[str]:
+    return run_depth() + run_batch()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Mist auto-tuning walkthrough (the paper's core workflow): compare
+restricted search spaces against full co-optimization for an assigned
+architecture on the production mesh, and show the per-stage heterogeneous
+plan Mist finds.
+
+    PYTHONPATH=src python examples/autotune.py [--arch qwen1.5-32b]
+"""
+import argparse
+
+from repro.configs.base import ShapeConfig, get_arch
+from repro.core.costmodel import estimate_plan
+from repro.core.tuner import tune
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-32b")
+    ap.add_argument("--devices", type=int, default=64)
+    ap.add_argument("--global-batch", type=int, default=64)
+    ap.add_argument("--seq", type=int, default=4096)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    shape = ShapeConfig("t", args.seq, args.global_batch, "train")
+    print(f"{cfg.name}: {cfg.param_count() / 1e9:.1f}B params on "
+          f"{args.devices} chips, global batch {args.global_batch}\n")
+    print(f"{'space':10s} {'step(s)':>9s} {'samples/s':>10s} "
+          f"{'speedup':>8s}  plan")
+
+    base = None
+    for space in ("none", "megatron", "ckpt", "zero", "offload", "mist"):
+        rep = tune(cfg, shape, args.devices, space=space,
+                   stage_counts=(1, 2, 4), grad_accums=(2, 4, 8, 16))
+        if rep.plan is None:
+            print(f"{space:10s} {'OOM':>9s}")
+            continue
+        if base is None:
+            base = rep.objective
+        s0 = rep.plan.stages[0]
+        desc = (f"S={rep.best_S} G={rep.best_G} dp={s0.dp} tp={s0.tp} "
+                f"zero={s0.zero} "
+                f"ckpt={min(s0.ckpt_layers, s0.layers)}/{s0.layers} "
+                f"oo={s0.oo:.2f} ao={s0.ao:.2f}")
+        print(f"{space:10s} {rep.objective:9.3f} "
+              f"{rep.throughput_samples:10.2f} "
+              f"{base / rep.objective:7.2f}x  {desc}")
+
+    # show the winning plan end-to-end estimate
+    rep = tune(cfg, shape, args.devices, space="mist",
+               stage_counts=(1, 2, 4), grad_accums=(2, 4, 8, 16))
+    if rep.plan is not None:
+        est = estimate_plan(cfg, shape, rep.plan)
+        print(f"\nbest plan stage detail "
+              f"(mem/chip {est['mem_peak_max'] / 2**30:.1f} GiB):")
+        for i, st in enumerate(rep.plan.stages):
+            print(f"  stage {i}: layers={st.layers} b={st.micro_batch} "
+                  f"dp={st.dp} tp={st.tp} zero={st.zero} "
+                  f"ckpt={min(st.ckpt_layers, st.layers)} wo={st.wo:.2f} "
+                  f"go={st.go:.2f} oo={st.oo:.2f} ao={st.ao:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""DBRX-132B [moe]: 16 experts top-4, fine-grained.  [hf:databricks/dbrx-base]"""
+from repro.configs.base import ArchConfig, register
+
+DBRX_132B = register(ArchConfig(
+    name="dbrx-132b",
+    family="moe",
+    num_layers=40,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=10752,
+    vocab_size=100352,
+    num_experts=16,
+    num_experts_per_tok=4,
+    moe_d_ff=10752,
+    norm_type="layernorm",
+    act="silu",
+    mlp_gated=True,
+    shapes=("train_4k", "prefill_32k", "decode_32k"),
+))

@@ -1,0 +1,21 @@
+"""InternVL2-1B [vlm]: Qwen2-0.5B-class LM backbone; InternViT frontend is a stub
+supplying precomputed patch embeddings.  [arXiv:2404.16821]"""
+from repro.configs.base import ArchConfig, register
+
+INTERNVL2_1B = register(ArchConfig(
+    name="internvl2-1b",
+    family="vlm",
+    num_layers=24,
+    d_model=896,
+    num_heads=14,
+    num_kv_heads=2,
+    d_ff=4864,
+    vocab_size=151655,
+    qkv_bias=True,
+    num_patches=256,       # stubbed ViT: 256 patch embeddings prepended to tokens
+    norm_type="rmsnorm",
+    act="silu",
+    mlp_gated=True,
+    tie_embeddings=True,
+    shapes=("train_4k", "prefill_32k", "decode_32k"),
+))

@@ -1,0 +1,24 @@
+"""MiniCPM3-4B [dense]: Multi-head Latent Attention (MLA).  [hf:openbmb/MiniCPM3-4B]"""
+from repro.configs.base import ArchConfig, register
+
+MINICPM3_4B = register(ArchConfig(
+    name="minicpm3-4b",
+    family="dense",
+    num_layers=62,
+    d_model=2560,
+    num_heads=40,
+    num_kv_heads=40,
+    d_ff=6400,
+    vocab_size=73448,
+    attention_type="mla",
+    q_lora_rank=768,
+    kv_lora_rank=256,
+    qk_rope_head_dim=32,
+    qk_nope_head_dim=64,
+    v_head_dim=64,
+    head_dim=96,  # nope + rope
+    norm_type="rmsnorm",
+    act="silu",
+    mlp_gated=True,
+    shapes=("train_4k", "prefill_32k", "decode_32k"),
+))

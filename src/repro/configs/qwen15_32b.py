@@ -1,0 +1,18 @@
+"""Qwen1.5-32B [dense]: MHA (kv=40), QKV bias.  [hf:Qwen/Qwen1.5-32B]"""
+from repro.configs.base import ArchConfig, register
+
+QWEN15_32B = register(ArchConfig(
+    name="qwen1.5-32b",
+    family="dense",
+    num_layers=64,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=40,
+    d_ff=27392,
+    vocab_size=152064,
+    qkv_bias=True,
+    norm_type="rmsnorm",
+    act="silu",
+    mlp_gated=True,
+    shapes=("train_4k", "prefill_32k", "decode_32k"),
+))

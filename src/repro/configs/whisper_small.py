@@ -1,0 +1,21 @@
+"""Whisper-small [audio]: enc-dec backbone; conv frontend is a stub supplying
+precomputed frame embeddings.  [arXiv:2212.04356]"""
+from repro.configs.base import ArchConfig, register
+
+WHISPER_SMALL = register(ArchConfig(
+    name="whisper-small",
+    family="audio",
+    num_layers=12,          # decoder layers
+    encoder_layers=12,
+    encoder_seq=1500,       # frames after the (stubbed) conv1d stem
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    d_ff=3072,
+    vocab_size=51865,
+    norm_type="layernorm",
+    act="gelu",
+    mlp_gated=False,
+    tie_embeddings=True,
+    shapes=("train_4k", "prefill_32k", "decode_32k"),
+))

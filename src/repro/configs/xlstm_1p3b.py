@@ -1,0 +1,20 @@
+"""xLSTM-1.3B [ssm]: mLSTM blocks (matrix memory, chunkwise-parallel).  [arXiv:2405.04517]"""
+from repro.configs.base import ArchConfig, register
+
+XLSTM_1P3B = register(ArchConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,                # mLSTM blocks carry their own 2x up-projection; no separate FFN
+    vocab_size=50304,
+    xlstm_heads=4,
+    ssm_expand=2,
+    norm_type="rmsnorm",
+    act="gelu",
+    mlp_gated=False,
+    # recurrent-state decode -> long_500k applies
+    shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+))

@@ -1,0 +1,428 @@
+"""Symbolic cost model: runtime + peak memory of one pipeline stage as
+symbolic expressions over the optimization variables (paper §5.2).
+
+The model is built ONCE per (arch, seq_len, stage-role); evaluating a batch
+of N candidate configurations is a vectorized numpy substitution into the
+expression DAG (`core/symbolic.py`) followed by the batched interference
+model (`core/interference.py`, paper Alg. 1) — this is what makes Mist's
+brute-force intra-stage sweep cheap (paper reports >1e5x vs per-config
+simulation; see benchmarks/tuning_time.py for ours).
+
+Symbols (per stage i, paper Table 2):
+    b, dp, tp          parallelism
+    L                  layers in this stage
+    G                  gradient accumulation steps
+    ckpt               number of recomputed layers (0..L)
+    z1, z2, z3         ZeRO level indicators (z1 >= z2 >= z3, 0/1 floats)
+    wo, go, oo, ao     offload ratios [0,1]
+    inflight           live microbatches at peak (1F1B: S - stage_idx)
+
+Outputs (numpy arrays over the candidate batch):
+    mem_fwd, mem_bwd   peak bytes per device during fwd / bwd
+    t_stable           stable-microbatch wall time (Eq. 5)
+    d_delta            first+last microbatch extra time (Eq. 6)
+    t_step             full-step estimate for S=1: G*t + d + const
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import symbolic as S
+from repro.core.hardware import V5E, HardwareSpec
+from repro.core.interference import InterferenceModel, pred_intf
+from repro.core.schedule import OVERLAP_SCHEDULE, Candidate, PhaseTraffic
+from repro.core.symbolic import Expr, Sym, ceil_div, smax, smin, where, wrap
+
+
+# ---------------------------------------------------------------------------
+# Tunable constants (calibratable; literature-informed defaults)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CostParams:
+    mxu_eff_peak: float = 0.75       # best-case MXU efficiency of big matmuls
+    mxu_eff_floor: float = 0.08
+    mxu_sat_tokens: float = 1024.0   # tokens/device at which eff saturates
+    vpu_tax: float = 0.12            # non-matmul compute as a fraction of dot time
+    ici_eff: float = 0.85            # achievable fraction of link bandwidth
+    host_eff: float = 0.90           # achievable fraction of host DMA bw
+    coll_latency_us: float = 12.0    # per-collective launch latency
+    mem_headroom: float = 0.92       # usable fraction of HBM
+    runtime_reserved: float = 0.75 * 2**30  # XLA runtime + fragmentation
+
+
+# ---------------------------------------------------------------------------
+# Analytic per-arch constants (derived from abstract param shapes — exact)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ArchStats:
+    n_layer: float            # params per (stacked) backbone layer
+    n_layer_active: float     # ... counting only routed-active experts (MoE)
+    n_shared: float           # shared-block params (Zamba2) applied repeatedly
+    shared_apps_per_layer: float  # shared-block applications per backbone layer
+    n_embed: float            # embedding (+ head + final norm) params
+    attn_layers_frac: float   # fraction of layers with full attention
+    d_model: int
+    d_ff: int
+    num_heads: int
+    kv_heads: int
+    head_dim: int
+    vocab: int
+    act_coef_full: float      # saved-act bytes per token per layer / d_model (no remat)
+    act_coef_ckpt: float      # ... for a rematerialized layer (boundary only)
+    flops_token_layer: float  # non-attention matmul flops per token per layer (fwd)
+    attn_flops_coef: float    # attention score+pv flops per token per layer = c*s
+
+
+def _sum_params(tree: Dict[str, Any]) -> float:
+    return float(sum(math.prod(v.shape) for v in tree.values()))
+
+
+def arch_stats(cfg: ArchConfig) -> ArchStats:
+    from repro.models.zoo import abstract_params
+
+    params, _ = abstract_params(cfg)
+    layer_tot = 0.0
+    shared_tot = 0.0
+    embed_tot = 0.0
+    lead_divisor = None
+    for name, sds in params.items():
+        n = math.prod(sds.shape)
+        if name.startswith(("layers/", "backbone/", "encoder/", "decoder/")):
+            layer_tot += n
+        elif name.startswith(("shared/", "shared_attn/")):
+            shared_tot += n
+        else:
+            embed_tot += n
+    # stacked leading dims: L or (groups, per-group)
+    L = cfg.num_layers
+    n_layer = layer_tot / max(1, L)
+
+    # MoE: active = layer minus inactive routed experts
+    n_layer_active = n_layer
+    if cfg.num_experts:
+        per_expert = (3 if cfg.mlp_gated else 2) * cfg.d_model * cfg.moe_d_ff
+        n_layer_active = n_layer - (cfg.num_experts
+                                    - cfg.num_experts_per_tok) * per_expert
+
+    shared_apps = (1.0 / cfg.shared_attn_every if cfg.shared_attn_every
+                   else 0.0)
+    if cfg.family == "hybrid":
+        attn_frac = shared_apps
+    elif cfg.family == "ssm":
+        attn_frac = 0.0
+    elif cfg.family == "audio":
+        attn_frac = 1.0          # self+cross handled via flops coef below
+    else:
+        attn_frac = 1.0
+
+    d, dff = cfg.d_model, (cfg.moe_d_ff if cfg.num_experts else cfg.d_ff)
+    hd = cfg.head_dim
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+
+    # --- saved activations per token per layer (bf16, units of d_model) ----
+    # attention: norm-in(1) + q(H*hd/d) + k,v(2*KV*hd/d) + attn-out(H*hd/d)
+    #            + norm-in(1) + gate/up(2*dff*topk_eff/d) + down-in(dff*topk/d)
+    # flash/blocked attention saves only O(1) softmax stats (ignored).
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        topk = (cfg.num_experts_per_tok + cfg.num_shared_experts
+                if cfg.num_experts else 1)
+        mlp_units = (3 if cfg.mlp_gated else 2) * dff * topk / d
+        attn_units = 2 + 2 * (H * hd) / d + 2 * (KV * hd) / d
+        act_full = attn_units + 1 + mlp_units
+    elif cfg.family == "hybrid":
+        dinner = cfg.ssm_expand * d
+        act_full = 2 + 2 * (2 * dinner + 2 * cfg.ssm_groups
+                            * cfg.ssm_state) / d
+        act_full += shared_apps * (4 + (3 * cfg.d_ff) / d)
+    else:  # ssm / xlstm
+        dinner = cfg.ssm_expand * d
+        act_full = 2 + 2 * (2 * dinner) / d + (2 * cfg.ssm_groups
+                                               * cfg.ssm_state) / d
+    act_ckpt = 1.0  # layer boundary (residual stream) only
+
+    # --- fwd matmul flops per token per layer (2*active params works) ------
+    flops_tok = 2.0 * n_layer_active
+    if cfg.family == "hybrid":
+        flops_tok = 2.0 * (n_layer_active + shared_apps * shared_tot)
+
+    # attention O(s) term per token per layer: QK^T + PV, causal halves it:
+    # 2 matmuls * 2 flops * H * hd * (s/2) = 2*H*hd*s per token
+    attn_coef = 2.0 * H * hd * attn_frac
+    if cfg.family == "audio":
+        # decoder self (causal) + cross-attn to encoder_seq + encoder self
+        attn_coef = 2.0 * H * hd * 2.0
+
+    return ArchStats(
+        n_layer=n_layer, n_layer_active=n_layer_active, n_shared=shared_tot,
+        shared_apps_per_layer=shared_apps, n_embed=embed_tot,
+        attn_layers_frac=attn_frac, d_model=d, d_ff=dff, num_heads=H,
+        kv_heads=KV, head_dim=hd, vocab=cfg.vocab_size,
+        act_coef_full=act_full, act_coef_ckpt=act_ckpt,
+        flops_token_layer=flops_tok, attn_flops_coef=attn_coef,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The stage cost model
+# ---------------------------------------------------------------------------
+
+SYMS = ("b", "dp", "tp", "L", "G", "ckpt", "z1", "z2", "z3",
+        "wo", "go", "oo", "ao", "inflight")
+
+
+class StageCostModel:
+    """Symbolic runtime + memory for one pipeline stage of `cfg` at `seq`."""
+
+    def __init__(self, cfg: ArchConfig, seq_len: int, *,
+                 hw: HardwareSpec = V5E, cp: CostParams = CostParams(),
+                 has_embed: bool = True, has_head: bool = True,
+                 interference: Optional[InterferenceModel] = None,
+                 sequence_parallel: bool = True):
+        self.cfg, self.seq, self.hw, self.cp = cfg, seq_len, hw, cp
+        self.has_embed, self.has_head = has_embed, has_head
+        self.intf = interference or InterferenceModel()
+        self.st = arch_stats(cfg)
+        self.sp = sequence_parallel
+        self._build()
+
+    # -- expression construction ---------------------------------------------
+    def _build(self):
+        st, seq, hw, cp = self.st, self.seq, self.hw, self.cp
+        b, dp, tp = Sym("b"), Sym("dp"), Sym("tp")
+        L, G, ckpt = Sym("L"), Sym("G"), Sym("ckpt")
+        z1, z2, z3 = Sym("z1"), Sym("z2"), Sym("z3")
+        wo, go, oo, ao = Sym("wo"), Sym("go"), Sym("oo"), Sym("ao")
+        inflight = Sym("inflight")
+
+        # ---- parameter byte counts (per device) ----------------------------
+        n_stage = st.n_layer * L + st.n_shared \
+            + (st.n_embed if (self.has_embed or self.has_head) else 0.0)
+        n_tp = n_stage / tp                      # TP shards ~everything
+        w_bytes = 2.0 * n_tp / where(z3, dp, 1.0)          # bf16 weights
+        g_bytes = 4.0 * n_tp / where(z2, dp, 1.0) * (1.0 - go)  # f32 accum
+        m_bytes = 4.0 * n_tp / where(z1, dp, 1.0) * (1.0 - wo)  # f32 master
+        o_bytes = 8.0 * n_tp / where(z1, dp, 1.0) * (1.0 - oo)  # f32 mu+nu
+        states = w_bytes + g_bytes + m_bytes + o_bytes
+
+        # ---- activations ----------------------------------------------------
+        sp_div = tp if self.sp else wrap(1.0)
+        tok = b * seq
+        act_full_l = 2.0 * st.act_coef_full * st.d_model * tok / sp_div
+        act_ckpt_l = 2.0 * st.act_coef_ckpt * st.d_model * tok / sp_div
+        ck = smin(ckpt, L)
+        acts_mb = ck * act_ckpt_l * (1.0 - ao) + (L - ck) * act_full_l
+        acts = acts_mb * inflight
+
+        # transient working set: one layer's full intermediates during
+        # (re)compute + gathered zero-3 params for ~2 layers + attn scratch
+        trans = 2.0 * act_full_l + z3 * 2.0 * (2.0 * st.n_layer / tp)
+        trans = trans + 2.0 * act_ckpt_l * inflight  # bwd boundary grads
+        logits = (2.0 * b * min(512, seq) * st.vocab * 4.0 / tp
+                  if self.has_head else wrap(0.0))
+
+        self.mem_fwd: Expr = states + acts + trans + logits + cp.runtime_reserved
+        self.mem_bwd: Expr = states + acts + trans + logits \
+            + act_full_l + cp.runtime_reserved  # recompute scratch in bwd
+
+        # ---- compute times (per microbatch, this stage) ---------------------
+        flops_fwd = (st.flops_token_layer * L
+                     + st.attn_flops_coef * seq * L) * tok / tp
+        if self.has_embed or self.has_head:
+            flops_fwd = flops_fwd + 2.0 * st.n_embed * tok / tp
+        # MXU efficiency: saturating in per-device tokens
+        eff = cp.mxu_eff_floor + (cp.mxu_eff_peak - cp.mxu_eff_floor) * (
+            tok / (tok + cp.mxu_sat_tokens))
+        t_fwd = flops_fwd * (1.0 + cp.vpu_tax) / (hw.peak_flops_bf16 * eff)
+        t_bwd = 2.0 * t_fwd
+        t_recompute = t_fwd * (ck / smax(L, 1.0))
+
+        # ---- collective times (per microbatch) ------------------------------
+        ici = hw.ici_bw_total * cp.ici_eff
+        lat = cp.coll_latency_us * 1e-6
+        tp_on = (tp > 1)
+        # TP: 2 AR (or AG+RS pair ~ same wire bytes) per layer fwd; 2 in bwd
+        tp_wire_l = 2.0 * (2.0 * (tp - 1.0) / tp) * (2.0 * st.d_model * tok
+                                                     / sp_div)
+        attn_layers = st.attn_layers_frac
+        t_tp_fwd = tp_on * (L * tp_wire_l / ici + L * 2.0 * lat)
+        t_tp_bwd = tp_on * (L * tp_wire_l / ici + L * 2.0 * lat) \
+            + tp_on * t_recompute * 0.0  # recompute TP comm folded below
+        # recomputed layers redo their fwd TP collectives in bwd
+        t_tp_bwd = t_tp_bwd + tp_on * (ck * tp_wire_l / ici)
+
+        dp_on = (dp > 1)
+        w_msg = 2.0 * n_tp                      # bf16 params
+        g_msg = 4.0 * n_tp                      # f32 grads
+        # ZeRO-3: AG params each microbatch fwd + bwd
+        t_z3_fwd = z3 * dp_on * ((dp - 1.0) / dp * w_msg / ici + lat * 8.0)
+        t_z3_bwd = t_z3_fwd
+        # ZeRO-2: RS grads each microbatch (no persistent full-grad buffer)
+        t_z2_rs = z2 * dp_on * ((dp - 1.0) / dp * g_msg / ici + lat * 8.0)
+        # ZeRO<=1: one grad AR at the last microbatch
+        t_dp_sync = (1.0 - z2) * dp_on * (2.0 * (dp - 1.0) / dp * g_msg / ici
+                                          + lat * 8.0)
+        # ZeRO>=1: updated-param AG once per step (first microbatch)
+        t_z1_ag = z1 * dp_on * ((dp - 1.0) / dp * w_msg / ici + lat * 8.0)
+
+        # ---- host-offload DMA times -----------------------------------------
+        host = hw.host_bw * cp.host_eff
+        opt_shard = 8.0 * n_tp / where(z1, dp, 1.0)
+        mst_shard = 4.0 * n_tp / where(z1, dp, 1.0)
+        grd_shard = 4.0 * n_tp / where(z2, dp, 1.0)
+        t_opt_in = oo * opt_shard / host
+        t_opt_out = t_opt_in
+        t_mst_in = wo * mst_shard / host
+        t_mst_out = t_mst_in
+        t_go_out = go * grd_shard / host       # per microbatch
+        t_go_in = t_go_out
+        t_ao_out = ao * ck * act_ckpt_l / host  # per microbatch fwd
+        t_ao_in = t_ao_out                      # bwd
+
+        # ---- analytic HBM traffic per microbatch (TPU target) --------------
+        # weights re-read per pass (fwd, bwd, + recomputed fraction), saved
+        # activations written+read, residual stream through every layer,
+        # f32 grad-accum read+write; optimizer traffic amortized per step.
+        w_local = 2.0 * n_tp
+        act_rw = 2.0 * acts_mb + 2.0 * L * (2.0 * st.d_model * tok / sp_div)
+        hbm_mb = (2.0 + ck / smax(L, 1.0)) * w_local + act_rw \
+            + 2.0 * g_bytes / smax(1.0, 1.0) \
+            + 2.0 * act_full_l * (1.0 + ck / smax(L, 1.0))
+        hbm_step_const = 2.0 * (12.0 * n_tp / where(z1, dp, 1.0)) \
+            + 2.0 * 2.0 * n_tp
+        self.hbm_bytes_mb: Expr = hbm_mb
+        self.hbm_bytes_step: Expr = Sym("G") * hbm_mb + hbm_step_const
+
+        self.items: Dict[str, Expr] = {
+            "fwd": t_fwd, "bwd": t_bwd, "recompute": t_recompute,
+            "opt_step": 0.02 * t_fwd,  # per-layer decoupled optimizer math
+            "tp_fwd": t_tp_fwd, "tp_bwd": t_tp_bwd,
+            "zero3_allgather_fwd": t_z3_fwd, "zero3_allgather_bwd": t_z3_bwd,
+            "zero2_reduce_scatter": t_z2_rs,
+            "dp_grad_sync": t_dp_sync,
+            "zero1_param_allgather": t_z1_ag,
+            "act_offload_out": t_ao_out, "act_offload_in": t_ao_in,
+            "grad_offload_out": t_go_out, "grad_offload_in": t_go_in,
+            "opt_swap_in": t_opt_in, "opt_swap_out": t_opt_out,
+            "master_swap_in": t_mst_in, "master_swap_out": t_mst_out,
+        }
+        # extra items referenced by phases but folded elsewhere
+        self._first_extra = ("zero1_param_allgather",)
+
+    # -- evaluation -----------------------------------------------------------
+    def _env(self, env: Dict[str, Any]) -> Dict[str, Any]:
+        e = dict(env)
+        zero = np.asarray(e.pop("zero"))
+        e["z1"] = (zero >= 1).astype(np.float64)
+        e["z2"] = (zero >= 2).astype(np.float64)
+        e["z3"] = (zero >= 3).astype(np.float64)
+        e.setdefault("inflight", 1.0)
+        for k in SYMS:
+            if k not in e:
+                raise KeyError(f"cost-model env missing {k!r}")
+        e = {k: np.asarray(v, np.float64) for k, v in e.items()}
+        return e
+
+    def phase_channels(self, phase: PhaseTraffic, vals: Dict[str, np.ndarray]
+                       ) -> Tuple[np.ndarray, ...]:
+        def tot(names):
+            out = 0.0
+            for n in names:
+                out = out + vals[n]
+            return np.asarray(out, np.float64)
+        g2g = list(phase.g2g)
+        if phase.name == "first":
+            g2g += list(self._first_extra)
+        return (tot(phase.compute), tot(g2g), tot(phase.d2h), tot(phase.h2d))
+
+    def evaluate(self, env: Dict[str, Any]) -> Dict[str, np.ndarray]:
+        """env binds each symbol to a scalar or a 1-D candidate array."""
+        e = self._env(env)
+        memo: Dict[int, Any] = {}
+        vals = {k: np.asarray(expr.evaluate(e, memo), np.float64)
+                for k, expr in self.items.items()}
+        mem_fwd = np.asarray(self.mem_fwd.evaluate(e, memo), np.float64)
+        mem_bwd = np.asarray(self.mem_bwd.evaluate(e, memo), np.float64)
+
+        phases = {p.name: pred_intf(*self.phase_channels(p, vals),
+                                    model=self.intf)
+                  for p in OVERLAP_SCHEDULE}
+        t_stable = phases["stable"]
+        d_delta = np.maximum(phases["first"] - t_stable, 0.0) \
+            + np.maximum(phases["last"] - t_stable, 0.0)
+        G = e["G"]
+        t_step = G * t_stable + d_delta
+        return {
+            "mem_fwd": mem_fwd, "mem_bwd": mem_bwd,
+            "mem_peak": np.maximum(mem_fwd, mem_bwd),
+            "t_stable": t_stable, "d_delta": d_delta, "t_step": t_step,
+            "t_first": phases["first"], "t_last": phases["last"],
+            "items": vals,
+        }
+
+    # -- convenience: evaluate a list of Candidates ---------------------------
+    def env_from_candidates(self, cands: Sequence[Candidate], *, layers: int,
+                            grad_accum: int, inflight: float = 1.0
+                            ) -> Dict[str, np.ndarray]:
+        def arr(f):
+            return np.asarray([f(c) for c in cands], np.float64)
+        return {
+            "b": arr(lambda c: c.b), "dp": arr(lambda c: c.dp),
+            "tp": arr(lambda c: c.tp), "zero": arr(lambda c: c.zero),
+            "ckpt": arr(lambda c: min(c.ckpt, layers)),
+            "wo": arr(lambda c: c.wo), "go": arr(lambda c: c.go),
+            "oo": arr(lambda c: c.oo), "ao": arr(lambda c: c.ao),
+            "L": float(layers), "G": float(grad_accum),
+            "inflight": float(inflight),
+        }
+
+    def memory_budget(self) -> float:
+        return self.hw.hbm_bytes * self.cp.mem_headroom
+
+
+# ---------------------------------------------------------------------------
+# Whole-plan estimate (S = 1 fast path; pipeline handled by inter_stage)
+# ---------------------------------------------------------------------------
+
+
+def estimate_plan(cfg: ArchConfig, shape: ShapeConfig, plan, *,
+                  hw: HardwareSpec = V5E, cp: CostParams = CostParams()
+                  ) -> Dict[str, float]:
+    """Step-time / memory estimate of a concrete Plan (any S) using the same
+    stage model + paper Eq. 1 for the pipeline objective."""
+    n_st = len(plan.stages)
+    ts, ds, mems = [], [], []
+    for i, stg in enumerate(plan.stages):
+        scm = StageCostModel(cfg, shape.seq_len, hw=hw, cp=cp,
+                             has_embed=(i == 0), has_head=(i == n_st - 1),
+                             sequence_parallel=plan.sequence_parallel)
+        cand = Candidate(b=stg.micro_batch, dp=stg.dp, tp=stg.tp,
+                         zero=stg.zero, ckpt=min(stg.ckpt_layers, stg.layers),
+                         wo=stg.wo, go=stg.go, oo=stg.oo, ao=stg.ao)
+        env = scm.env_from_candidates([cand], layers=stg.layers,
+                                      grad_accum=plan.grad_accum,
+                                      inflight=max(1, n_st - i))
+        r = scm.evaluate(env)
+        ts.append(float(r["t_stable"][0]))
+        ds.append(float(r["d_delta"][0]))
+        mems.append(float(r["mem_peak"][0]))
+    G = plan.grad_accum
+    # paper Eq. 1
+    t_step = (G - 1) * max(ts) + sum(ts) + max(
+        d - sum(ts[:i]) for i, d in enumerate(ds))
+    tokens = shape.global_batch * shape.seq_len
+    return {
+        "t_step": t_step, "throughput_tokens": tokens / t_step,
+        "throughput_samples": shape.global_batch / t_step,
+        "mem_peak_max": max(mems), "mem_per_stage": mems,
+        "t_stable_per_stage": ts, "d_delta_per_stage": ds,
+        "fits": max(mems) <= hw.hbm_bytes * cp.mem_headroom,
+    }

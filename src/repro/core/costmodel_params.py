@@ -1,0 +1,21 @@
+"""Analytic parameter counting (exact: sums abstract param shapes)."""
+from __future__ import annotations
+
+import math
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:
+    from repro.configs.base import ArchConfig
+
+
+def param_count(cfg: "ArchConfig", active_only: bool = False) -> int:
+    from repro.models.zoo import abstract_params
+
+    params, _ = abstract_params(cfg)
+    total = sum(math.prod(s.shape) for s in params.values())
+    if active_only and cfg.num_experts:
+        # subtract inactive routed-expert weights
+        per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+        inactive = (cfg.num_experts - cfg.num_experts_per_tok) * per_expert
+        total -= inactive * cfg.num_layers
+    return int(total)

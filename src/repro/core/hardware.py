@@ -1,0 +1,25 @@
+"""TPU hardware model (v5e-class target; the container is CPU-only, so these
+constants drive the cost model and the roofline denominators)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12      # per chip
+    hbm_bw: float = 819e9                # bytes/s per chip
+    hbm_bytes: float = 16 * 2**30        # capacity per chip
+    ici_bw: float = 50e9                 # bytes/s per link (spec-given)
+    ici_links: int = 2                   # usable links per chip (conservative)
+    dci_bw: float = 6.25e9               # inter-pod (pod axis) per chip
+    host_bw: float = 25e9                # host<->HBM per chip (offload path)
+    mxu_min_dim: int = 128               # MXU tile alignment
+
+    @property
+    def ici_bw_total(self) -> float:
+        return self.ici_bw * self.ici_links
+
+
+V5E = HardwareSpec()

@@ -1,0 +1,177 @@
+"""Intra-stage tuning: Dual-Objective Constrained Optimization (paper §5.3).
+
+Given a stage (its layer count, device count, grad-accum G, memory budget),
+find, over the grid of (b, DP, TP, ZeRO, CKPT, WO, GO, OO, AO):
+
+    min_{p,z,o}  alpha * G * t_{p,z,o} + (1 - alpha) * d_{p,z,o}
+    s.t.  max(Mem_fwd, Mem_bwd) <= Mem_budget                     (Eq. 4)
+
+for a uniform sample of alpha in [0,1] — the winners over alpha form the
+(t, d) Pareto frontier handed to the inter-stage MILP (Eq. 2-3).
+
+The full grid is evaluated in ONE batched substitution into the symbolic
+cost model (no per-config simulation), which is the paper's key tuning-speed
+idea.  A local ratio-refinement pass then descends on the four offload
+ratios around each frontier point (the paper treats them as continuous).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.costmodel import CostParams, StageCostModel
+from repro.core.hardware import V5E, HardwareSpec
+from repro.core.schedule import RATIO_GRID, Candidate, enumerate_candidates
+
+
+@dataclass(frozen=True)
+class ParetoPoint:
+    t: float                  # stable microbatch time (Eq. 5)
+    d: float                  # first/last delta (Eq. 6)
+    mem: float                # peak bytes
+    cand: Candidate
+
+    def dominates(self, o: "ParetoPoint") -> bool:
+        return (self.t <= o.t and self.d <= o.d
+                and (self.t < o.t or self.d < o.d))
+
+
+@dataclass
+class IntraStageResult:
+    """Pareto frontier for one (layers, devices, G) stage hypothesis."""
+    layers: int
+    n_devices: int
+    grad_accum: int
+    frontier: List[ParetoPoint]      # sorted by t ascending / d descending
+    n_evaluated: int = 0
+    n_feasible: int = 0
+
+    def best(self, weight_t: float) -> Optional[ParetoPoint]:
+        """argmin over the frontier of weight_t * t + d."""
+        if not self.frontier:
+            return None
+        return min(self.frontier, key=lambda p: weight_t * p.t + p.d)
+
+
+def pareto_front(pts: Sequence[ParetoPoint], max_points: int = 16
+                 ) -> List[ParetoPoint]:
+    """Non-dominated (t, d) points, decimated to <= max_points (uniform in
+    t-order — the paper's 'Pareto frontier sampling')."""
+    if not pts:
+        return []
+    pts = sorted(pts, key=lambda p: (p.t, p.d))
+    front: List[ParetoPoint] = []
+    best_d = float("inf")
+    for p in pts:
+        if p.d < best_d - 1e-12:
+            front.append(p)
+            best_d = p.d
+    if len(front) > max_points:
+        idx = np.linspace(0, len(front) - 1, max_points).round().astype(int)
+        front = [front[i] for i in sorted(set(idx.tolist()))]
+    return front
+
+
+def tune_stage(cfg: ArchConfig, *, seq_len: int, layers: int, n_devices: int,
+               global_batch_per_stage: int, grad_accum: int,
+               has_embed: bool = True, has_head: bool = True,
+               inflight: float = 1.0,
+               hw: HardwareSpec = V5E, cp: CostParams = CostParams(),
+               zeros: Sequence[int] = (0, 1, 2, 3),
+               ratios: Sequence[float] = RATIO_GRID,
+               ratio_dims: Sequence[str] = ("oo", "ao"),
+               ckpt_granularity: int = 0,
+               ckpt_values: Optional[Sequence[int]] = None,
+               max_tp: Optional[int] = None,
+               max_front: int = 16,
+               scm: Optional[StageCostModel] = None,
+               refine: bool = True) -> IntraStageResult:
+    """Batched sweep -> feasible set -> Pareto frontier -> ratio refinement."""
+    if ckpt_granularity <= 0:
+        ckpt_granularity = max(1, layers // 8)
+    cands = list(enumerate_candidates(
+        cfg, n_devices=n_devices, layers=layers,
+        global_batch=global_batch_per_stage, grad_accum=grad_accum,
+        zeros=zeros, ratios=ratios, ratio_dims=ratio_dims, max_tp=max_tp,
+        ckpt_granularity=ckpt_granularity, ckpt_values=ckpt_values))
+    res = IntraStageResult(layers=layers, n_devices=n_devices,
+                           grad_accum=grad_accum, frontier=[],
+                           n_evaluated=len(cands))
+    if not cands:
+        return res
+    scm = scm or StageCostModel(cfg, seq_len, hw=hw, cp=cp,
+                                has_embed=has_embed, has_head=has_head)
+    env = scm.env_from_candidates(cands, layers=layers,
+                                  grad_accum=grad_accum, inflight=inflight)
+    out = scm.evaluate(env)
+    budget = scm.memory_budget()
+    ok = out["mem_peak"] <= budget
+    res.n_feasible = int(ok.sum())
+    if not ok.any():
+        return res
+    idx = np.nonzero(ok)[0]
+    pts = [ParetoPoint(t=float(out["t_stable"][i]),
+                       d=float(out["d_delta"][i]),
+                       mem=float(out["mem_peak"][i]), cand=cands[i])
+           for i in idx]
+    front = pareto_front(pts, max_points=max_front)
+    if refine:
+        front = pareto_front(
+            [refine_ratios(p, scm, layers=layers, grad_accum=grad_accum,
+                           inflight=inflight, budget=budget) for p in front],
+            max_points=max_front)
+    res.frontier = front
+    return res
+
+
+def refine_ratios(p: ParetoPoint, scm: StageCostModel, *, layers: int,
+                  grad_accum: int, inflight: float, budget: float,
+                  iters: int = 2) -> ParetoPoint:
+    """Coordinate descent on (wo, go, oo, ao) around a grid winner — the
+    paper treats offload ratios as continuous floats (Table 2)."""
+    best = p
+    step = (RATIO_GRID[1] - RATIO_GRID[0]) / 2.0
+    for _ in range(iters):
+        cands = []
+        for dim in ("wo", "go", "oo", "ao"):
+            v = getattr(best.cand, dim)
+            for nv in (v - step, v + step):
+                if 0.0 <= nv <= 1.0:
+                    cands.append(dataclasses.replace(best.cand, **{dim: nv}))
+        if not cands:
+            break
+        env = scm.env_from_candidates(cands, layers=layers,
+                                      grad_accum=grad_accum,
+                                      inflight=inflight)
+        out = scm.evaluate(env)
+        for i, c in enumerate(cands):
+            if out["mem_peak"][i] > budget:
+                continue
+            q = ParetoPoint(t=float(out["t_stable"][i]),
+                            d=float(out["d_delta"][i]),
+                            mem=float(out["mem_peak"][i]), cand=c)
+            # keep the step-time scalarization improving
+            if (grad_accum * q.t + q.d) < (grad_accum * best.t + best.d):
+                best = q
+        step /= 2.0
+    return best
+
+
+def alpha_winners(result: IntraStageResult, n_alpha: int = 8
+                  ) -> List[ParetoPoint]:
+    """Paper Eq. 4: winners of  alpha*G*t + (1-alpha)*d  for uniform alpha
+    samples — equivalently a re-sampling of the frontier; exposed for the
+    breakdown benchmark."""
+    G = result.grad_accum
+    out = []
+    for a in np.linspace(0.0, 1.0, n_alpha):
+        best = min(result.frontier,
+                   key=lambda p: a * G * p.t + (1 - a) * p.d,
+                   default=None)
+        if best is not None and best not in out:
+            out.append(best)
+    return out

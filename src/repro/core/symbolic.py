@@ -1,0 +1,212 @@
+"""Symbolic expression engine with *batched* numpy evaluation.
+
+Mist's key idea #2: derive runtime/memory as symbolic expressions over the
+optimization variables once, then evaluate thousands of configurations by
+vectorized value substitution instead of re-simulating each one (paper §5.2
+reports >1e5 x speedup over per-config simulation; see
+benchmarks/tuning_time.py for ours).
+
+The engine is a small DAG (Const / Sym / BinOp / UnOp) with operator
+overloading, hash-consing-free but id-memoized evaluation, and numpy
+broadcasting so every symbol may be bound to an array of candidate values.
+``sympy`` is deliberately avoided in the hot path (too slow at ~1e6-point
+batched substitution).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Union
+
+import numpy as np
+
+Number = Union[int, float]
+
+
+class Expr:
+    # -- operator overloading -------------------------------------------------
+    def __add__(self, o):
+        return _bin("add", self, wrap(o))
+
+    def __radd__(self, o):
+        return _bin("add", wrap(o), self)
+
+    def __sub__(self, o):
+        return _bin("sub", self, wrap(o))
+
+    def __rsub__(self, o):
+        return _bin("sub", wrap(o), self)
+
+    def __mul__(self, o):
+        return _bin("mul", self, wrap(o))
+
+    def __rmul__(self, o):
+        return _bin("mul", wrap(o), self)
+
+    def __truediv__(self, o):
+        return _bin("div", self, wrap(o))
+
+    def __rtruediv__(self, o):
+        return _bin("div", wrap(o), self)
+
+    def __pow__(self, o):
+        return _bin("pow", self, wrap(o))
+
+    def __neg__(self):
+        return _bin("mul", Const(-1.0), self)
+
+    # comparisons produce 0/1 indicator expressions
+    def __ge__(self, o):
+        return _bin("ge", self, wrap(o))
+
+    def __le__(self, o):
+        return _bin("le", self, wrap(o))
+
+    def __gt__(self, o):
+        return _bin("gt", self, wrap(o))
+
+    def __lt__(self, o):
+        return _bin("lt", self, wrap(o))
+
+    def evaluate(self, env: Dict[str, Any], memo=None):
+        raise NotImplementedError
+
+    def __call__(self, **env):
+        return self.evaluate(env)
+
+
+class Const(Expr):
+    __slots__ = ("v",)
+
+    def __init__(self, v: Number):
+        self.v = float(v)
+
+    def evaluate(self, env, memo=None):
+        return self.v
+
+    def __repr__(self):
+        return f"{self.v:g}"
+
+
+class Sym(Expr):
+    __slots__ = ("name",)
+
+    def __init__(self, name: str):
+        self.name = name
+
+    def evaluate(self, env, memo=None):
+        try:
+            return env[self.name]
+        except KeyError:
+            raise KeyError(f"unbound symbol {self.name!r}; "
+                           f"have {sorted(env)}") from None
+
+    def __repr__(self):
+        return self.name
+
+
+_BIN_FNS: Dict[str, Callable] = {
+    "add": np.add, "sub": np.subtract, "mul": np.multiply,
+    "div": np.divide, "pow": np.power,
+    "max": np.maximum, "min": np.minimum,
+    "ge": lambda a, b: (np.asarray(a) >= b).astype(np.float64),
+    "le": lambda a, b: (np.asarray(a) <= b).astype(np.float64),
+    "gt": lambda a, b: (np.asarray(a) > b).astype(np.float64),
+    "lt": lambda a, b: (np.asarray(a) < b).astype(np.float64),
+}
+
+_UN_FNS: Dict[str, Callable] = {
+    "ceil": np.ceil, "floor": np.floor, "sqrt": np.sqrt, "log2": np.log2,
+    "abs": np.abs,
+}
+
+
+class BinOp(Expr):
+    __slots__ = ("op", "a", "b")
+
+    def __init__(self, op: str, a: Expr, b: Expr):
+        self.op, self.a, self.b = op, a, b
+
+    def evaluate(self, env, memo=None):
+        memo = {} if memo is None else memo
+        key = id(self)
+        if key in memo:
+            return memo[key]
+        out = _BIN_FNS[self.op](self.a.evaluate(env, memo),
+                                self.b.evaluate(env, memo))
+        memo[key] = out
+        return out
+
+    def __repr__(self):
+        return f"({self.a!r} {self.op} {self.b!r})"
+
+
+class UnOp(Expr):
+    __slots__ = ("op", "a")
+
+    def __init__(self, op: str, a: Expr):
+        self.op, self.a = op, a
+
+    def evaluate(self, env, memo=None):
+        memo = {} if memo is None else memo
+        key = id(self)
+        if key in memo:
+            return memo[key]
+        out = _UN_FNS[self.op](self.a.evaluate(env, memo))
+        memo[key] = out
+        return out
+
+    def __repr__(self):
+        return f"{self.op}({self.a!r})"
+
+
+def wrap(x) -> Expr:
+    return x if isinstance(x, Expr) else Const(x)
+
+
+def _bin(op, a, b) -> Expr:
+    # light constant folding
+    if isinstance(a, Const) and isinstance(b, Const):
+        return Const(_BIN_FNS[op](a.v, b.v))
+    if op == "add":
+        if isinstance(a, Const) and a.v == 0:
+            return b
+        if isinstance(b, Const) and b.v == 0:
+            return a
+    if op == "mul":
+        if isinstance(a, Const) and a.v == 1:
+            return b
+        if isinstance(b, Const) and b.v == 1:
+            return a
+        if (isinstance(a, Const) and a.v == 0) or \
+                (isinstance(b, Const) and b.v == 0):
+            return Const(0.0)
+    return BinOp(op, a, b)
+
+
+def smax(a, b) -> Expr:
+    return _bin("max", wrap(a), wrap(b))
+
+
+def smin(a, b) -> Expr:
+    return _bin("min", wrap(a), wrap(b))
+
+
+def ceil(a) -> Expr:
+    return UnOp("ceil", wrap(a))
+
+
+def ceil_div(a, b) -> Expr:
+    return ceil(wrap(a) / wrap(b))
+
+
+def where(cond: Expr, a, b) -> Expr:
+    """cond is a 0/1 indicator expression."""
+    c = wrap(cond)
+    return c * wrap(a) + (Const(1.0) - c) * wrap(b)
+
+
+def sum_exprs(xs) -> Expr:
+    out: Expr = Const(0.0)
+    for x in xs:
+        out = out + wrap(x)
+    return out

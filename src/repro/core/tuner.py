@@ -1,0 +1,266 @@
+"""MistTuner: imbalance-aware hierarchical tuning (paper §5.3, Fig. 6).
+
+Pipeline:  for each (S, G) hypothesis
+             intra-stage batched sweep  ->  (t, d) Pareto frontier per stage
+             inter-stage MILP over frontier samples (Eq. 2-3)
+           pick the best (S, G) by Eq. 1.
+
+Search-space presets reproduce the paper's baselines (Fig. 13 breakdown):
+
+    megatron   parallelism only, full CKPT, ZeRO-1       (Megatron-LM space)
+    ckpt       + activation-checkpoint tuning            (Aceso/AdaPipe space)
+    zero       + ZeRO level tuning                       (DeepSpeed space)
+    offload    + offload-ratio tuning
+    mist       everything co-tuned (+ imbalance awareness)
+    uniform    mist knobs but one shared config for all stages
+               (Yuan et al.-style heuristic)
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.costmodel import CostParams, StageCostModel
+from repro.core.hardware import V5E, HardwareSpec
+from repro.core.inter_stage import (InterStageSolution, StageCand,
+                                    pipeline_objective, solve_milp)
+from repro.core.intra_stage import IntraStageResult, ParetoPoint, tune_stage
+from repro.core.plan import Plan, StageConfig
+from repro.core.schedule import RATIO_GRID, grad_accum_choices
+
+SPACES = ("none", "megatron", "ckpt", "zero", "offload", "mist", "uniform")
+
+
+@dataclass(frozen=True)
+class TuneSpec:
+    arch: ArchConfig
+    seq_len: int
+    global_batch: int
+    n_devices: int
+    space: str = "mist"
+    imbalance_aware: bool = True
+    stage_counts: Optional[Sequence[int]] = None   # default: pow2 divisors
+    grad_accums: Optional[Sequence[int]] = None
+    layer_window: int = 2       # +- around uniform layers-per-stage
+    max_front: int = 12
+    max_tp: Optional[int] = None
+
+
+@dataclass
+class TuneReport:
+    plan: Optional[Plan]
+    objective: float            # Eq. 1 step-time estimate (seconds)
+    throughput_samples: float
+    throughput_tokens: float
+    space: str
+    n_points: int               # candidate configurations evaluated
+    n_milp: int
+    tune_seconds: float
+    best_S: int = 1
+    best_G: int = 1
+    per_sg: List[Tuple[int, int, float]] = field(default_factory=list)
+    infeasible: bool = False
+
+
+def _space_knobs(space: str, layers: int) -> Dict:
+    """ckpt: "none" (no recompute), "full" (all layers, Megatron default),
+    or "tune" (CKPT_i in the search space)."""
+    full = dict(zeros=(0, 1, 2, 3), ratios=RATIO_GRID,
+                ratio_dims=("oo", "ao"), ckpt="tune")
+    if space == "none":      # parallelism only — Fig. 2(a)
+        return dict(zeros=(0,), ratios=(0.0,), ratio_dims=(), ckpt="none")
+    if space == "megatron":  # fixed FULL recompute + ZeRO-1
+        return dict(zeros=(1,), ratios=(0.0,), ratio_dims=(), ckpt="full")
+    if space == "ckpt":      # Aceso/AdaPipe: + CKPT tuning
+        return dict(zeros=(1,), ratios=(0.0,), ratio_dims=(), ckpt="tune")
+    if space == "zero":      # DeepSpeed: + ZeRO tuning (full recompute)
+        return dict(zeros=(0, 1, 2, 3), ratios=(0.0,), ratio_dims=(),
+                    ckpt="full")
+    if space == "offload":   # + offload-ratio tuning
+        return dict(zeros=(1,), ratios=RATIO_GRID, ratio_dims=("oo", "ao"),
+                    ckpt="tune")
+    if space in ("mist", "uniform"):
+        return full
+    raise ValueError(f"unknown space {space!r}; have {SPACES}")
+
+
+class MistTuner:
+    def __init__(self, spec: TuneSpec, *, hw: HardwareSpec = V5E,
+                 cp: CostParams = CostParams()):
+        self.spec, self.hw, self.cp = spec, hw, cp
+        self._scm_cache: Dict[Tuple[bool, bool], StageCostModel] = {}
+
+    # -- stage cost model per role (L / inflight are symbols -> reusable) ---
+    def scm(self, has_embed: bool, has_head: bool) -> StageCostModel:
+        key = (has_embed, has_head)
+        if key not in self._scm_cache:
+            self._scm_cache[key] = StageCostModel(
+                self.spec.arch, self.spec.seq_len, hw=self.hw, cp=self.cp,
+                has_embed=has_embed, has_head=has_head)
+        return self._scm_cache[key]
+
+    def stage_counts(self) -> List[int]:
+        if self.spec.stage_counts is not None:
+            return list(self.spec.stage_counts)
+        N, L = self.spec.n_devices, self.spec.arch.num_layers
+        out = []
+        s = 1
+        while s <= min(N, L, 16):
+            if N % s == 0:
+                out.append(s)
+            s *= 2
+        return out
+
+    def grad_accums(self) -> List[int]:
+        if self.spec.grad_accums is not None:
+            return list(self.spec.grad_accums)
+        gs = grad_accum_choices(self.spec.global_batch, self.spec.n_devices)
+        # keep the sweep tractable: log-spaced subset
+        if len(gs) > 8:
+            idx = np.unique(np.geomspace(1, len(gs), 8).astype(int) - 1)
+            gs = [gs[i] for i in idx]
+        return gs
+
+    # -- per-(S, G) candidate construction -----------------------------------
+    def _layer_options(self, S: int) -> List[int]:
+        L = self.spec.arch.num_layers
+        base = L // S
+        w = self.spec.layer_window if S > 1 else 0
+        opts = sorted({max(1, base + k) for k in range(-w, w + 2)})
+        return [l for l in opts if l <= L]
+
+    def _frontier(self, *, layers: int, n_dev: int, G: int, role, inflight,
+                  knobs) -> IntraStageResult:
+        has_embed, has_head = role
+        return tune_stage(
+            self.spec.arch, seq_len=self.spec.seq_len, layers=layers,
+            n_devices=n_dev, global_batch_per_stage=self.spec.global_batch,
+            grad_accum=G, has_embed=has_embed, has_head=has_head,
+            inflight=inflight, hw=self.hw, cp=self.cp,
+            zeros=knobs["zeros"], ratios=knobs["ratios"],
+            ratio_dims=knobs["ratio_dims"],
+            ckpt_values={"tune": None, "full": (layers,),
+                         "none": (0,)}[knobs["ckpt"]],
+            max_tp=self.spec.max_tp, max_front=self.spec.max_front,
+            scm=self.scm(has_embed, has_head),
+            refine=bool(knobs["ratio_dims"]))
+
+    def _cands_for(self, S: int, G: int, knobs) -> List[List[StageCand]]:
+        N = self.spec.n_devices
+        n_dev = N // S
+        out: List[List[StageCand]] = []
+        self._n_points = getattr(self, "_n_points", 0)
+        for i in range(S):
+            role = (i == 0, i == S - 1)
+            inflight = float(S - i)
+            cs: List[StageCand] = []
+            for l in self._layer_options(S):
+                res = self._frontier(layers=l, n_dev=n_dev, G=G, role=role,
+                                     inflight=inflight, knobs=knobs)
+                self._n_points += res.n_evaluated
+                for p in res.frontier:
+                    d = p.d
+                    t = p.t
+                    if not self.spec.imbalance_aware:
+                        # ablation: average the delta into t (what prior
+                        # systems do), losing the imbalance term
+                        t = t + d / max(G, 1)
+                        d = 0.0
+                    cs.append(StageCand(layers=l, n_devices=n_dev, t=t, d=d,
+                                        point=p))
+            out.append(cs)
+        return out
+
+    # -- main ----------------------------------------------------------------
+    def tune(self) -> TuneReport:
+        t0 = time.time()
+        spec = self.spec
+        knobs = _space_knobs(spec.space, spec.arch.num_layers)
+        best: Optional[Tuple[float, int, int, InterStageSolution]] = None
+        per_sg = []
+        n_milp = 0
+        self._n_points = 0
+        for S in self.stage_counts():
+            for G in self.grad_accums():
+                if spec.global_batch % (G * 1) or spec.global_batch < G:
+                    continue
+                if spec.space == "uniform" and S > 1:
+                    sol = self._solve_uniform(S, G, knobs)
+                else:
+                    cands = self._cands_for(S, G, knobs)
+                    if any(not cs for cs in cands):
+                        continue
+                    sol = solve_milp(cands,
+                                     total_layers=spec.arch.num_layers,
+                                     total_devices=spec.n_devices, G=G)
+                    n_milp += 1
+                if sol is None:
+                    continue
+                per_sg.append((S, G, sol.objective))
+                if best is None or sol.objective < best[0]:
+                    best = (sol.objective, S, G, sol)
+        dt = time.time() - t0
+        if best is None:
+            return TuneReport(plan=None, objective=float("inf"),
+                              throughput_samples=0.0, throughput_tokens=0.0,
+                              space=spec.space, n_points=self._n_points,
+                              n_milp=n_milp, tune_seconds=dt,
+                              infeasible=True)
+        obj, S, G, sol = best
+        plan = self._to_plan(sol, G)
+        return TuneReport(
+            plan=plan, objective=obj,
+            throughput_samples=spec.global_batch / obj,
+            throughput_tokens=spec.global_batch * spec.seq_len / obj,
+            space=spec.space, n_points=self._n_points, n_milp=n_milp,
+            tune_seconds=dt, best_S=S, best_G=G, per_sg=per_sg)
+
+    def _solve_uniform(self, S: int, G: int, knobs
+                       ) -> Optional[InterStageSolution]:
+        """Yuan et al.-style heuristic: identical config on every stage."""
+        spec = self.spec
+        L, N = spec.arch.num_layers, spec.n_devices
+        if L % S or N % S:
+            return None
+        res = self._frontier(layers=L // S, n_dev=N // S, G=G,
+                             role=(True, True), inflight=float(S),
+                             knobs=knobs)
+        self._n_points += res.n_evaluated
+        if not res.frontier:
+            return None
+        best = None
+        for p in res.frontier:
+            sel = [StageCand(layers=L // S, n_devices=N // S, t=p.t, d=p.d,
+                             point=p)] * S
+            obj = pipeline_objective([p.t] * S, [p.d] * S, G)
+            if best is None or obj < best.objective:
+                best = InterStageSolution(objective=obj, selection=sel,
+                                          status="uniform")
+        return best
+
+    def _to_plan(self, sol: InterStageSolution, G: int) -> Plan:
+        stages = []
+        for c in sol.selection:
+            p = c.point
+            assert p is not None
+            stages.append(p.cand.to_stage(c.layers))
+        return Plan(grad_accum=G, stages=tuple(stages),
+                    sequence_parallel=True, remat_policy="full")
+
+
+# ---------------------------------------------------------------------------
+# convenience
+# ---------------------------------------------------------------------------
+
+
+def tune(arch: ArchConfig, shape: ShapeConfig, n_devices: int,
+         space: str = "mist", **kw) -> TuneReport:
+    spec = TuneSpec(arch=arch, seq_len=shape.seq_len,
+                    global_batch=shape.global_batch, n_devices=n_devices,
+                    space=space, **kw)
+    return MistTuner(spec).tune()

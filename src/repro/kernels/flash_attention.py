@@ -1,0 +1,115 @@
+"""Pallas TPU flash attention (forward): online-softmax over KV blocks.
+
+Grid: (batch*kv_heads*q_per_kv, num_q_blocks, num_kv_blocks) with the KV
+block dim innermost (sequential on TPU), carrying (acc, m, l) in VMEM
+scratch across KV iterations.  Block shapes are MXU-aligned (q_block x
+head_dim and kv_block x head_dim tiles, head_dim padded to >=128 by the
+wrapper when needed).
+
+The backward pass recomputes attention via the blocked-jnp path under
+``jax.custom_vjp`` (flash-style recompute; see ops.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               scale: float, causal: bool, q_block: int, kv_block: int,
+               kv_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * q_block
+    k_start = ki * kv_block
+
+    run = True
+    if causal:
+        # skip blocks strictly above the diagonal
+        run = k_start <= q_start + q_block - 1
+
+    @pl.when(run if causal else True)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)            # (q_block, d)
+        k = k_ref[0].astype(jnp.float32)            # (kv_block, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (q_block, kv_block), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (q_block, kv_block), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]                         # (q_block, 1)
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, q_block: int = 256,
+                        kv_block: int = 256, scale: float | None = None,
+                        interpret: bool = True) -> jax.Array:
+    """q (BH, Sq, D), k/v (BH, Sk, D) -> (BH, Sq, D).
+
+    BH = batch * heads (GQA expansion done by the wrapper in ops.py).
+    """
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, sk)
+    assert sq % q_block == 0 and sk % kv_block == 0, (sq, sk, q_block, kv_block)
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    grid = (bh, sq // q_block, sk // kv_block)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, q_block=q_block,
+        kv_block=kv_block, kv_len=sk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_block, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, kv_block, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, kv_block, d), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, d), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            # VMEM carries across the sequential kv grid dim
+            pltpu.VMEM((q_block, d), jnp.float32),
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def naive_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    scale: float | None = None) -> jax.Array:
+    """q/k/v (BH, S, D) -> (BH, Sq, D); full S^2 softmax in f32."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    s = jnp.einsum("bqd,bkd->bqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w.astype(v.dtype), v)
+
+
+def rmsnorm_ref(x: jax.Array, scale: jax.Array, eps: float = 1e-6
+                ) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_ref(xh: jax.Array, dt: jax.Array, a: jax.Array, bb: jax.Array,
+            cc: jax.Array) -> jax.Array:
+    """Exact sequential SSD recurrence (the strongest oracle — independent
+    of any chunking algebra).  xh (B,S,H,P), dt (B,S,H) f32, a (H,) f32,
+    bb/cc (B,S,H,N) -> y (B,S,H,P)."""
+    bsz, s, h, p = xh.shape
+    n = bb.shape[-1]
+
+    def step(hstate, inp):
+        x_t, dt_t, b_t, c_t = inp             # (B,H,P),(B,H),(B,H,N),(B,H,N)
+        dec = jnp.exp(dt_t * a)               # (B,H)
+        hstate = hstate * dec[..., None, None] + \
+            (dt_t[..., None] * x_t.astype(jnp.float32))[..., None] \
+            * b_t[..., None, :].astype(jnp.float32)
+        y_t = jnp.einsum("bhpn,bhn->bhp", hstate,
+                         c_t.astype(jnp.float32))
+        return hstate, y_t
+
+    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    xs = (xh.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          bb.transpose(1, 0, 2, 3), cc.transpose(1, 0, 2, 3))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(xh.dtype)

@@ -1,0 +1,73 @@
+"""Serving launcher: batched prefill + decode against the KV/state cache.
+
+    python -m repro.launch.serve --arch granite-3-8b --smoke \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def generate(model, params, prompts: jnp.ndarray, gen: int, mesh, plan):
+    """Greedy decode `gen` tokens for a batch of fixed-length prompts."""
+    from repro.models.zoo import pad_caches
+    from repro.training.step import make_prefill_step, make_serve_step
+
+    b, plen = prompts.shape
+    max_len = plen + gen
+    prefill = make_prefill_step(model, plan, mesh, return_cache=True)
+    logits, caches = prefill.fn(params, {"tokens": prompts})
+    caches = pad_caches(caches, gen)
+    serve = make_serve_step(model, plan, mesh, b, max_len, donate=False)
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    out = [tok]
+    for _ in range(gen - 1):
+        logits, caches = serve.fn(params, tok, caches)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs.base import get_arch
+    from repro.core.plan import single_stage_plan
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.zoo import build_model
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    n = len(jax.devices())
+    mesh = make_host_mesh(n, 1)
+    plan = single_stage_plan(cfg.num_layers, dp=n, tp=1, micro_batch=1,
+                             grad_accum=1, zero=0, ckpt_layers=0)
+    with jax.set_mesh(mesh):
+        params, _ = model.init(jax.random.PRNGKey(0))
+        prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                     (args.batch, args.prompt_len), 0,
+                                     cfg.vocab_size).astype(jnp.int32)
+        t0 = time.time()
+        toks = generate(model, params, prompts, args.gen, mesh, plan)
+        dt = time.time() - t0
+    total = args.batch * args.gen
+    print(f"generated {total} tokens in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s); first row: {np.asarray(toks[0])[:8]}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,2 @@
+from repro.models.common import ExecConfig, Params, ShardRules, use_rules  # noqa: F401
+from repro.models.zoo import Model, abstract_params, build_model, input_specs  # noqa: F401

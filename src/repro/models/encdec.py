@@ -1,0 +1,197 @@
+"""Whisper-style encoder-decoder backbone.  The conv1d audio frontend is a
+STUB: ``input_specs()`` supplies precomputed frame embeddings (B, T_enc, D).
+[arXiv:2212.04356]
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.common import (Axes, ExecConfig, ParamBuilder, Params,
+                                 StackedBuilder, name_act,
+                                 segmented_layer_scan, shard_act, subtree)
+from repro.models.decoder import chunked_xent
+
+MAX_DECODER_POS = 32_768
+
+
+def sinusoid_pos(seq: int, d: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10_000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def init_encdec(rng: jax.Array, cfg: ArchConfig, dtype=jnp.bfloat16,
+                abstract: bool = False) -> Tuple[Params, Axes]:
+    pb = ParamBuilder(rng, dtype, abstract=abstract)
+    d = cfg.d_model
+    pb.add("embed/w", (cfg.vocab_size, d), ("vocab", "embed"), scale=0.02)
+    pb.add("pos_dec/w", (MAX_DECODER_POS, d), (None, "embed"), scale=0.02)
+
+    eb = StackedBuilder(pb, "encoder/layers", cfg.encoder_layers)
+    L.init_norm(eb.scope("ln1"), cfg)
+    L.init_attention(eb.scope("attn"), cfg)
+    L.init_norm(eb.scope("ln2"), cfg)
+    L.init_mlp(eb.scope("mlp"), cfg)
+    L.init_norm(pb.scope("encoder/final_norm"), cfg)
+
+    db = StackedBuilder(pb, "decoder/layers", cfg.num_layers)
+    L.init_norm(db.scope("ln1"), cfg)
+    L.init_attention(db.scope("self_attn"), cfg)
+    L.init_norm(db.scope("lnx"), cfg)
+    L.init_attention(db.scope("cross_attn"), cfg)
+    L.init_norm(db.scope("ln2"), cfg)
+    L.init_mlp(db.scope("mlp"), cfg)
+    L.init_norm(pb.scope("decoder/final_norm"), cfg)
+    return pb.params, pb.axes
+
+
+def encode(params: Params, frames: jax.Array, cfg: ArchConfig, ec: ExecConfig
+           ) -> jax.Array:
+    """frames (B, T_enc, D) precomputed (stub frontend) -> encoder output."""
+    x = frames.astype(ec.compute_dtype) + \
+        sinusoid_pos(frames.shape[1], cfg.d_model).astype(ec.compute_dtype)
+    x = shard_act(x, ("dp", None, None))
+    stacked = subtree(params, "encoder/layers")
+
+    def body(carry, lp):
+        h, = carry
+        hn = L.norm(subtree(lp, "ln1"), h, cfg)
+        a, _ = L.attention(subtree(lp, "attn"), hn, cfg, ec, mask_kind="full")
+        h = h + a
+        hn = L.norm(subtree(lp, "ln2"), h, cfg)
+        h = h + L.mlp(subtree(lp, "mlp"), hn, cfg)
+        h = name_act(shard_act(h, ("dp", None, None)), "resid")
+        return (h,)
+
+    (h,) = segmented_layer_scan(body, (x,), stacked, cfg.encoder_layers, ec)
+    return L.norm(subtree(params, "encoder/final_norm"), h, cfg)
+
+
+def _decoder_block(lp: Params, h: jax.Array, enc_out, cfg, ec,
+                   self_cache=None, cross_cache=None, pos0: int = 0,
+                   return_cache: bool = False):
+    hn = L.norm(subtree(lp, "ln1"), h, cfg)
+    a, new_self = L.attention(subtree(lp, "self_attn"), hn, cfg, ec,
+                              cache=self_cache)
+    if return_cache and self_cache is None:
+        from repro.models.decoder import _fresh_attn_cache
+        new_self = _fresh_attn_cache(subtree(lp, "self_attn"), hn, cfg)
+    h = h + a
+    hn = L.norm(subtree(lp, "lnx"), h, cfg)
+    if cross_cache is not None:
+        a, new_cross = L.attention(subtree(lp, "cross_attn"), hn, cfg, ec,
+                                   cache=cross_cache)
+    else:
+        a, _ = L.attention(subtree(lp, "cross_attn"), hn, cfg, ec,
+                           mask_kind="full", kv_x=enc_out)
+        new_cross = None
+        if return_cache:
+            pa = subtree(lp, "cross_attn")
+            k = jnp.einsum("bsd,dhk->bshk", enc_out, pa["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", enc_out, pa["wv"])
+            new_cross = {"k": k, "v": v}
+    h = h + a
+    hn = L.norm(subtree(lp, "ln2"), h, cfg)
+    h = h + L.mlp(subtree(lp, "mlp"), hn, cfg)
+    h = name_act(shard_act(h, ("dp", "sp", None)), "resid")
+    return h, new_self, new_cross
+
+
+def encdec_loss(params: Params, batch: Dict, cfg: ArchConfig, ec: ExecConfig
+                ) -> jax.Array:
+    enc_out = encode(params, batch["frames"], cfg, ec)
+    tokens = batch["tokens"]
+    s = tokens.shape[1]
+    x = jnp.take(params["embed/w"], tokens, axis=0).astype(ec.compute_dtype)
+    x = x + params["pos_dec/w"][:s].astype(ec.compute_dtype)
+    x = shard_act(x, ("dp", "sp", None))
+    stacked = subtree(params, "decoder/layers")
+
+    def body(carry, lp):
+        h, = carry
+        h, _, _ = _decoder_block(lp, h, enc_out, cfg, ec)
+        return (h,)
+
+    (h,) = segmented_layer_scan(body, (x,), stacked, cfg.num_layers, ec)
+    h = L.norm(subtree(params, "decoder/final_norm"), h, cfg)
+    return chunked_xent(h, params["embed/w"].T, batch["labels"],
+                        batch.get("loss_mask"))
+
+
+def encdec_prefill(params: Params, batch: Dict, cfg: ArchConfig,
+                   ec: ExecConfig, return_cache: bool = False):
+    enc_out = encode(params, batch["frames"], cfg, ec)
+    tokens = batch["tokens"]
+    s = tokens.shape[1]
+    x = jnp.take(params["embed/w"], tokens, axis=0).astype(ec.compute_dtype)
+    x = x + params["pos_dec/w"][:s].astype(ec.compute_dtype)
+    x = shard_act(x, ("dp", "sp", None))
+    stacked = subtree(params, "decoder/layers")
+
+    if not return_cache:
+        def body(carry, lp):
+            h, = carry
+            h, _, _ = _decoder_block(lp, h, enc_out, cfg, ec)
+            return (h,)
+
+        (h,) = segmented_layer_scan(body, (x,), stacked, cfg.num_layers, ec)
+        h = L.norm(subtree(params, "decoder/final_norm"), h, cfg)
+        logits = (h[:, -1:] @ params["embed/w"].T).astype(jnp.float32)
+        return shard_act(logits, ("dp", None, "tp"))
+
+    def body(carry, lp):
+        h, = carry
+        h, sc, cc = _decoder_block(lp, h, enc_out, cfg, ec, return_cache=True)
+        return (h,), {"self": sc, "cross": cc}
+
+    (h,), caches = jax.lax.scan(body, (x,), stacked)
+    h = L.norm(subtree(params, "decoder/final_norm"), h, cfg)
+    logits = (h[:, -1:] @ params["embed/w"].T).astype(jnp.float32)
+    return shard_act(logits, ("dp", None, "tp")), caches
+
+
+def encdec_decode(params: Params, tokens: jax.Array, caches, cfg: ArchConfig,
+                  ec: ExecConfig):
+    """caches: {"self": stacked self KV (+pos), "cross": stacked cross KV}."""
+    x = jnp.take(params["embed/w"], tokens, axis=0).astype(ec.compute_dtype)
+    p0 = caches["self"]["pos"][0]
+    x = x + jax.lax.dynamic_slice_in_dim(params["pos_dec/w"], p0, 1
+                                         ).astype(ec.compute_dtype)[None]
+    stacked = subtree(params, "decoder/layers")
+
+    def body(h, xs):
+        lp, sc, cc = xs
+        h, new_self, new_cross = _decoder_block(lp, h, None, cfg, ec,
+                                                self_cache=sc, cross_cache=cc)
+        return h, {"self": new_self, "cross": new_cross}
+
+    h, new_caches = jax.lax.scan(body, x,
+                                 (stacked, caches["self"], caches["cross"]))
+    h = L.norm(subtree(params, "decoder/final_norm"), h, cfg)
+    logits = (h @ params["embed/w"].T).astype(jnp.float32)
+    return shard_act(logits, ("dp", None, "tp")), new_caches
+
+
+def init_encdec_caches(cfg: ArchConfig, batch: int, max_len: int,
+                       dtype=jnp.bfloat16):
+    selfc = L.init_self_kv_cache(cfg, batch, max_len, dtype)
+    crossc = {
+        "k": jnp.zeros((batch, cfg.encoder_seq, cfg.num_kv_heads,
+                        cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, cfg.encoder_seq, cfg.num_kv_heads,
+                        cfg.head_dim), dtype),
+    }
+    ld = cfg.num_layers
+    return {
+        "self": jax.tree.map(
+            lambda v: jnp.broadcast_to(v[None], (ld,) + v.shape), selfc),
+        "cross": jax.tree.map(
+            lambda v: jnp.broadcast_to(v[None], (ld,) + v.shape), crossc),
+    }

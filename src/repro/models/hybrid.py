@@ -1,0 +1,202 @@
+"""Zamba2-style hybrid: Mamba2 backbone in groups, with one *shared*
+attention+MLP block applied at the start of every group, fed by a
+per-group projection of concat(hidden, original embedding).
+[arXiv:2411.15242; per-application LoRA simplified to a per-group in-proj,
+see DESIGN.md §4]
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import ssm as SSM
+from repro.models.common import (Axes, ExecConfig, ParamBuilder, Params,
+                                 StackedBuilder, name_act,
+                                 segmented_layer_scan, shard_act, subtree)
+from repro.models.decoder import chunked_xent, unembed_matrix
+
+
+def group_shape(cfg: ArchConfig) -> Tuple[int, int]:
+    per = cfg.shared_attn_every
+    assert cfg.num_layers % per == 0, (cfg.num_layers, per)
+    return cfg.num_layers // per, per
+
+
+def init_hybrid(rng: jax.Array, cfg: ArchConfig, dtype=jnp.bfloat16,
+                abstract: bool = False) -> Tuple[Params, Axes]:
+    pb = ParamBuilder(rng, dtype, abstract=abstract)
+    d = cfg.d_model
+    ng, per = group_shape(cfg)
+    pb.add("embed/w", (cfg.vocab_size, d), ("vocab", "embed"), scale=0.02)
+    # per-group input projection for the shared block: concat(h, x0) -> d
+    gb = StackedBuilder(pb, "groups", ng)
+    gb.add("in_proj", (2 * d, d), ("embed", None), scale=1.0 / math.sqrt(2 * d))
+    # shared attention + MLP block (one set of weights, applied ng times)
+    sb = pb.scope("shared")
+    L.init_norm(sb.scope("ln1"), cfg)
+    L.init_attention(sb.scope("attn"), cfg)
+    L.init_norm(sb.scope("ln2"), cfg)
+    L.init_mlp(sb.scope("mlp"), cfg)
+    # mamba backbone, stacked (groups, per-group)
+    mb = StackedBuilder(pb, "mamba", (ng, per))
+    L.init_norm(mb.scope("ln"), cfg)
+    SSM.init_mamba2(mb.scope("mixer"), cfg)
+    L.init_norm(pb.scope("final_norm"), cfg)
+    pb.add("lm_head/w", (d, cfg.vocab_size), ("embed", "vocab"),
+           scale=1.0 / math.sqrt(d))
+    return pb.params, pb.axes
+
+
+def _shared_block(shared: Params, gin: jax.Array, h: jax.Array,
+                  x0: jax.Array, cfg: ArchConfig, ec: ExecConfig,
+                  cache=None, return_cache=False):
+    """Apply the shared attention block; gin is this group's in-proj."""
+    z = jnp.concatenate([h, x0], axis=-1) @ gin
+    zn = L.norm(subtree(shared, "ln1"), z, cfg)
+    a, new_cache = L.attention(subtree(shared, "attn"), zn, cfg, ec,
+                               cache=cache)
+    if return_cache and cache is None:
+        from repro.models.decoder import _fresh_attn_cache
+        new_cache = _fresh_attn_cache(subtree(shared, "attn"), zn, cfg)
+    z = z + a
+    zn = L.norm(subtree(shared, "ln2"), z, cfg)
+    z = z + L.mlp(subtree(shared, "mlp"), zn, cfg)
+    return h + z, new_cache
+
+
+def _mamba_layer(lp: Params, h: jax.Array, cfg: ArchConfig, ec: ExecConfig,
+                 cache=None, return_state=False):
+    hn = L.norm(subtree(lp, "ln"), h, cfg)
+    m, nc = SSM.mamba2_mixer(subtree(lp, "mixer"), hn, cfg, ec, cache=cache,
+                             return_state=return_state)
+    return h + m, nc
+
+
+def run_hybrid_layers(params: Params, x: jax.Array, cfg: ArchConfig,
+                      ec: ExecConfig) -> jax.Array:
+    """Train/prefill forward over all groups (remat-segmented at group level)."""
+    ng, per = group_shape(cfg)
+    shared = subtree(params, "shared")
+    mamba = subtree(params, "mamba")
+    gproj = subtree(params, "groups")
+    x0 = x
+
+    # remat segmentation quantized to groups: ckpt_layers -> groups
+    ec_g = ec.replace(
+        ckpt_layers=-(-min(ec.ckpt_layers, cfg.num_layers) // per),
+        offload_layers=-(-min(ec.offload_layers, cfg.num_layers) // per))
+
+    def group_body(carry, gp):
+        h, = carry
+        gproj_g, mamba_g = gp["in_proj"], {k: v for k, v in gp.items()
+                                           if k != "in_proj"}
+        h, _ = _shared_block(shared, gproj_g, h, x0, cfg, ec)
+        h = shard_act(h, ("dp", "sp", None))
+
+        def layer_body(hh, lp):
+            hh, _ = _mamba_layer(lp, hh, cfg, ec)
+            return hh, None
+
+        h, _ = jax.lax.scan(layer_body, h, mamba_g)
+        h = name_act(h, "resid")
+        return (h,)
+
+    stacked = dict(mamba, in_proj=gproj["in_proj"])
+    (h,) = segmented_layer_scan(group_body, (x,), stacked, ng, ec_g)
+    return L.norm(subtree(params, "final_norm"), h, cfg)
+
+
+def hybrid_loss(params: Params, batch: Dict, cfg: ArchConfig, ec: ExecConfig
+                ) -> jax.Array:
+    x = jnp.take(params["embed/w"], batch["tokens"], axis=0
+                 ).astype(ec.compute_dtype)
+    x = shard_act(x, ("dp", "sp", None))
+    h = run_hybrid_layers(params, x, cfg, ec)
+    return chunked_xent(h, params["lm_head/w"], batch["labels"],
+                        batch.get("loss_mask"))
+
+
+def hybrid_prefill(params: Params, batch: Dict, cfg: ArchConfig,
+                   ec: ExecConfig, return_cache: bool = False):
+    x = jnp.take(params["embed/w"], batch["tokens"], axis=0
+                 ).astype(ec.compute_dtype)
+    x = shard_act(x, ("dp", "sp", None))
+    if not return_cache:
+        h = run_hybrid_layers(params, x, cfg, ec)
+        logits = (h[:, -1:] @ params["lm_head/w"]).astype(jnp.float32)
+        return shard_act(logits, ("dp", None, "tp"))
+
+    ng, per = group_shape(cfg)
+    shared = subtree(params, "shared")
+    gproj = subtree(params, "groups")
+    mamba = subtree(params, "mamba")
+    x0, h = x, x
+
+    def group_body(carry, gp):
+        h, = carry
+        h, attn_c = _shared_block(shared, gp["in_proj"], h, x0, cfg, ec,
+                                  return_cache=True)
+
+        def layer_body(hh, lp):
+            hh, st = _mamba_layer(lp, hh, cfg, ec, return_state=True)
+            return hh, st
+
+        h, mamba_c = jax.lax.scan(layer_body, h,
+                                  {k: v for k, v in gp.items()
+                                   if k != "in_proj"})
+        return (h,), {"attn": attn_c, "mamba": mamba_c}
+
+    stacked = dict(mamba, in_proj=gproj["in_proj"])
+    (h,), caches = jax.lax.scan(group_body, (h,), stacked)
+    h = L.norm(subtree(params, "final_norm"), h, cfg)
+    logits = (h[:, -1:] @ params["lm_head/w"]).astype(jnp.float32)
+    return shard_act(logits, ("dp", None, "tp")), caches
+
+
+def hybrid_decode(params: Params, tokens: jax.Array, caches, cfg: ArchConfig,
+                  ec: ExecConfig):
+    x = jnp.take(params["embed/w"], tokens, axis=0).astype(ec.compute_dtype)
+    x0 = x
+    shared = subtree(params, "shared")
+    gproj = subtree(params, "groups")
+    mamba = subtree(params, "mamba")
+
+    def group_body(h, xs):
+        gp, gc = xs
+        h, attn_c = _shared_block(shared, gp["in_proj"], h, x0, cfg, ec,
+                                  cache=gc["attn"])
+
+        def layer_body(hh, xs2):
+            lp, lc = xs2
+            hh, nc = _mamba_layer(lp, hh, cfg, ec, cache=lc)
+            return hh, nc
+
+        h, mamba_c = jax.lax.scan(
+            layer_body, h, ({k: v for k, v in gp.items() if k != "in_proj"},
+                            gc["mamba"]))
+        return h, {"attn": attn_c, "mamba": mamba_c}
+
+    stacked = dict(mamba, in_proj=gproj["in_proj"])
+    h, new_caches = jax.lax.scan(group_body, x, (stacked, caches))
+    h = L.norm(subtree(params, "final_norm"), h, cfg)
+    logits = (h @ params["lm_head/w"]).astype(jnp.float32)
+    return shard_act(logits, ("dp", None, "tp")), new_caches
+
+
+def init_hybrid_caches(cfg: ArchConfig, batch: int, max_len: int,
+                       dtype=jnp.bfloat16):
+    ng, per = group_shape(cfg)
+    attn_c = L.init_self_kv_cache(cfg, batch, max_len, dtype)
+    mamba_c = SSM.init_mamba2_cache(cfg, batch, dtype)
+    return {
+        "attn": jax.tree.map(
+            lambda v: jnp.broadcast_to(v[None], (ng,) + v.shape), attn_c),
+        "mamba": jax.tree.map(
+            lambda v: jnp.broadcast_to(v[None, None], (ng, per) + v.shape),
+            mamba_c),
+    }

@@ -1,0 +1,183 @@
+"""Mamba2 (SSD) block: chunked state-space dual form for train/prefill and a
+single-step recurrence for decode.  [arXiv:2405.21060]
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import ExecConfig, Params, ScopedBuilder, shard_act
+
+
+def d_inner(cfg: ArchConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def num_ssm_heads(cfg: ArchConfig) -> int:
+    return d_inner(cfg) // cfg.ssm_head_dim
+
+
+def conv_dim(cfg: ArchConfig) -> int:
+    return d_inner(cfg) + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def init_mamba2(b: ScopedBuilder, cfg: ArchConfig):
+    d = cfg.d_model
+    di, h, gn = d_inner(cfg), num_ssm_heads(cfg), cfg.ssm_groups * cfg.ssm_state
+    d_proj = 2 * di + 2 * gn + h
+    b.add("in_proj", (d, d_proj), ("embed", "inner"), scale=1.0 / math.sqrt(d))
+    b.add("conv_w", (cfg.ssm_conv, conv_dim(cfg)), (None, "inner"),
+          scale=1.0 / math.sqrt(cfg.ssm_conv))
+    b.add("conv_b", (conv_dim(cfg),), ("inner",), init="zeros")
+    b.add("A_log", (h,), ("heads",), init="zeros")
+    b.add("D", (h,), ("heads",), init="ones")
+    b.add("dt_bias", (h,), ("heads",), init="zeros")
+    b.add("norm_scale", (di,), ("inner",), init="ones")
+    b.add("out_proj", (di, d), ("inner", "embed"), scale=1.0 / math.sqrt(di))
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv; x (B,S,C), w (K,C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array) -> jax.Array:
+    yf = (y * jax.nn.silu(z)).astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+    return (yf * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def ssd_chunked(xh: jax.Array, dt: jax.Array, a: jax.Array, bb: jax.Array,
+                cc: jax.Array, chunk: int, h0: Optional[jax.Array] = None,
+                use_pallas: bool = False
+                ) -> Tuple[jax.Array, jax.Array]:
+    """SSD over chunks.  xh (B,S,H,P); dt (B,S,H) f32; a (H,) f32 (negative);
+    bb/cc (B,S,H,N).  Returns (y (B,S,H,P), final state (B,H,P,N) f32)."""
+    bsz, s, h, p = xh.shape
+    n = bb.shape[-1]
+    q = min(chunk, s)
+    nc = s // q
+    assert nc * q == s, (s, q)
+
+    if use_pallas and h0 is None:
+        from repro.kernels import ops as kops
+        return kops.ssd_scan(xh, dt, a, bb, cc, chunk=q)
+
+    xc = xh.reshape(bsz, nc, q, h, p)
+    dtc = dt.reshape(bsz, nc, q, h)
+    bc = bb.reshape(bsz, nc, q, h, n)
+    ccc = cc.reshape(bsz, nc, q, h, n)
+
+    da = dtc * a  # (B,C,Q,H) f32
+    cum = jnp.cumsum(da, axis=2)
+    # intra-chunk (diagonal blocks).  NOTE: mask BEFORE the exp — above the
+    # diagonal rel > 0 grows with |da| and exp(rel) overflows; masking after
+    # the exp leaves inf*0 = NaN in the backward pass.
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (B,C,Qt,Qs,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    l_mat = jnp.exp(jnp.where(tri[None, None, :, :, None], rel, -jnp.inf))
+    scores = jnp.einsum("bcqhn,bcshn->bcqsh", ccc, bc,
+                        preferred_element_type=jnp.float32)
+    scores = scores * l_mat * dtc[:, :, None, :, :]
+    y_diag = jnp.einsum("bcqsh,bcshp->bcqhp", scores.astype(xh.dtype), xc)
+
+    # per-chunk input states
+    wdec = jnp.exp(cum[:, :, -1:, :] - cum) * dtc            # (B,C,Q,H)
+    states = jnp.einsum("bcqhn,bcqhp->bchpn",
+                        (bc * wdec[..., None]).astype(xh.dtype), xc,
+                        preferred_element_type=jnp.float32)  # (B,C,H,P,N) f32
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (B,C,H)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(carry, inp):
+        st, dec = inp
+        nxt = carry * dec[:, :, None, None] + st
+        return nxt, carry
+
+    hT, h_prev = jax.lax.scan(
+        step, h0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                 # (B,C,H,P,N)
+
+    c_dec = (ccc * jnp.exp(cum)[..., None]).astype(xh.dtype)
+    y_off = jnp.einsum("bcqhn,bchpn->bcqhp", c_dec,
+                       h_prev.astype(xh.dtype))
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, hT
+
+
+def mamba2_mixer(p: Params, x: jax.Array, cfg: ArchConfig, ec: ExecConfig,
+                 cache: Optional[Dict] = None, return_state: bool = False
+                 ) -> Tuple[jax.Array, Optional[Dict]]:
+    """x (B,S,D) -> (out, new_cache).  cache: {"conv": (B,K-1,convdim),
+    "ssm": (B,H,P,N) f32} for decode.  return_state: populate a cache from
+    a prefill pass."""
+    bsz, s, _ = x.shape
+    di, h, p_, n, g = (d_inner(cfg), num_ssm_heads(cfg), cfg.ssm_head_dim,
+                       cfg.ssm_state, cfg.ssm_groups)
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + conv_dim(cfg)]
+    dt_raw = zxbcdt[..., di + conv_dim(cfg):]
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+
+    if cache is None:
+        xbc_raw = xbc
+        xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+        xin = xbc[..., :di].reshape(bsz, s, h, p_)
+        xin = shard_act(xin, ("dp", None, "tp", None))
+        bb = xbc[..., di:di + g * n].reshape(bsz, s, g, n)
+        cc = xbc[..., di + g * n:].reshape(bsz, s, g, n)
+        rep = h // g
+        bb = jnp.repeat(bb, rep, axis=2)
+        cc = jnp.repeat(cc, rep, axis=2)
+        y, h_final = ssd_chunked(xin, dt, a, bb, cc, ec.ssd_chunk,
+                                 use_pallas=ec.use_pallas and not return_state)
+        y = y + p["D"].astype(y.dtype)[:, None] * xin
+        new_cache = None
+        if return_state:
+            kw = cfg.ssm_conv - 1
+            new_cache = {"conv": xbc_raw[:, -kw:], "ssm": h_final}
+    else:
+        # decode: conv ring buffer + single-step SSD recurrence
+        conv_st = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B,K,convdim)
+        xbc1 = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv_st, p["conv_w"])
+                           + p["conv_b"])[:, None, :]
+        xin = xbc1[..., :di].reshape(bsz, 1, h, p_)
+        bb = xbc1[..., di:di + g * n].reshape(bsz, g, n)
+        cc = xbc1[..., di + g * n:].reshape(bsz, g, n)
+        rep = h // g
+        bb = jnp.repeat(bb, rep, axis=1)
+        cc = jnp.repeat(cc, rep, axis=1)
+        dt1 = dt[:, 0]                                          # (B,H)
+        dec = jnp.exp(dt1 * a)                                  # (B,H)
+        hs = cache["ssm"] * dec[:, :, None, None] + \
+            (dt1[:, :, None] * xin[:, 0].astype(jnp.float32)
+             )[..., None] * bb[:, :, None, :].astype(jnp.float32)
+        y = jnp.einsum("bhpn,bhn->bhp", hs.astype(x.dtype), cc)
+        y = y + p["D"].astype(y.dtype)[:, None] * xin[:, 0]
+        y = y[:, None]                                          # (B,1,H,P)
+        new_cache = {"conv": conv_st[:, 1:], "ssm": hs}
+
+    y = _gated_norm(y.reshape(bsz, s, di), z, p["norm_scale"])
+    return y @ p["out_proj"], new_cache
+
+
+def init_mamba2_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> Dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim(cfg)), dtype),
+        "ssm": jnp.zeros((batch, num_ssm_heads(cfg), cfg.ssm_head_dim,
+                          cfg.ssm_state), jnp.float32),
+    }

@@ -1,0 +1,72 @@
+"""InternVL2-style VLM: LM decoder backbone with a stubbed ViT frontend.
+``input_specs()`` supplies precomputed patch embeddings which are projected
+and prepended to the token embeddings.  [arXiv:2404.16821]
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.common import (Axes, ExecConfig, ParamBuilder, Params,
+                                 shard_act, subtree)
+from repro.models import decoder as DEC
+
+
+def init_vlm(rng: jax.Array, cfg: ArchConfig, dtype=jnp.bfloat16,
+             abstract: bool = False) -> Tuple[Params, Axes]:
+    params, axes = DEC.init_lm(rng, cfg, dtype, abstract=abstract)
+    pb = ParamBuilder(None if abstract else jax.random.fold_in(rng, 1), dtype,
+                      abstract=abstract)
+    pb.add("vis_proj/w", (cfg.d_model, cfg.d_model), ("embed", None),
+           scale=1.0 / math.sqrt(cfg.d_model))
+    params.update(pb.params)
+    axes.update(pb.axes)
+    return params, axes
+
+
+def _fuse(params: Params, batch: Dict, cfg: ArchConfig, ec: ExecConfig):
+    patches = batch["patch_embeds"].astype(ec.compute_dtype) @ params["vis_proj/w"]
+    tok = DEC.embed_tokens(params, batch["tokens"], cfg, ec)
+    x = jnp.concatenate([patches, tok], axis=1)
+    return shard_act(x, ("dp", "sp", None))
+
+
+def vlm_loss(params: Params, batch: Dict, cfg: ArchConfig, ec: ExecConfig
+             ) -> jax.Array:
+    x = _fuse(params, batch, cfg, ec)
+    h, aux = DEC.run_layers(params, x, cfg, ec)
+    h_text = h[:, cfg.num_patches:]  # loss over text positions only
+    loss = DEC.chunked_xent(h_text, DEC.unembed_matrix(params, cfg),
+                            batch["labels"], batch.get("loss_mask"))
+    return loss + DEC.AUX_COEF * aux / cfg.num_layers
+
+
+def vlm_prefill(params: Params, batch: Dict, cfg: ArchConfig, ec: ExecConfig,
+                return_cache: bool = False):
+    x = _fuse(params, batch, cfg, ec)
+    if not return_cache:
+        h, _ = DEC.run_layers(params, x, cfg, ec)
+        logits = (h[:, -1:] @ DEC.unembed_matrix(params, cfg)
+                  ).astype(jnp.float32)
+        return shard_act(logits, ("dp", None, "tp"))
+    stacked = subtree(params, "layers")
+
+    def body(carry, lp):
+        h, = carry
+        h, _, nc = DEC.apply_block(lp, h, cfg, ec, return_cache=True)
+        return (h,), nc
+
+    (h,), caches = jax.lax.scan(body, (x,), stacked)
+    h = L.norm(subtree(params, "final_norm"), h, cfg)
+    logits = (h[:, -1:] @ DEC.unembed_matrix(params, cfg)).astype(jnp.float32)
+    return shard_act(logits, ("dp", None, "tp")), caches
+
+
+# decode is identical to the plain LM (patches live in the cache already)
+vlm_decode = DEC.lm_decode
+init_vlm_caches = DEC.init_lm_caches

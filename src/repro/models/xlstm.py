@@ -1,0 +1,189 @@
+"""xLSTM mLSTM block: exponential-gated matrix-memory recurrence, exact
+chunkwise-parallel training form (log-space stabilized) + recurrent decode.
+[arXiv:2405.04517]
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import ExecConfig, Params, ScopedBuilder, shard_act
+
+NEG = -1e30
+
+
+def d_inner(cfg: ArchConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def init_mlstm(b: ScopedBuilder, cfg: ArchConfig):
+    d, di, nh = cfg.d_model, d_inner(cfg), cfg.xlstm_heads
+    kw = 4
+    b.add("up_proj", (d, 2 * di), ("embed", "inner"), scale=1.0 / math.sqrt(d))
+    b.add("conv_w", (kw, di), (None, "inner"), scale=1.0 / math.sqrt(kw))
+    b.add("conv_b", (di,), ("inner",), init="zeros")
+    b.add("wq", (di, di), ("inner", "inner2"), scale=1.0 / math.sqrt(di))
+    b.add("wk", (di, di), ("inner", "inner2"), scale=1.0 / math.sqrt(di))
+    b.add("wv", (di, di), ("inner", "inner2"), scale=1.0 / math.sqrt(di))
+    b.add("wi", (di, nh), ("inner", "heads"), scale=1.0 / math.sqrt(di))
+    b.add("bi", (nh,), ("heads",), init="zeros")
+    b.add("wf", (di, nh), ("inner", "heads"), scale=1.0 / math.sqrt(di))
+    b.add("bf", (nh,), ("heads",), init="ones")
+    b.add("out_norm", (di,), ("inner",), init="ones")
+    b.add("down_proj", (di, d), ("inner", "embed"), scale=1.0 / math.sqrt(di))
+
+
+def _causal_conv(x, w, b):
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def mlstm_chunked(q, k, v, li, lf, chunk: int,
+                  state: Optional[Dict] = None):
+    """Exact chunkwise mLSTM.  q/k/v (B,S,NH,HD); li/lf (B,S,NH) f32
+    (log input gate preact, log-sigmoid forget gate).  Returns
+    (h (B,S,NH,HD), final state {"c","n","m"})."""
+    bsz, s, nh, hd = q.shape
+    qn = min(chunk, s)
+    nc = s // qn
+    assert nc * qn == s
+    shp = (bsz, nc, qn, nh)
+    qc = q.reshape(bsz, nc, qn, nh, hd)
+    kc = k.reshape(bsz, nc, qn, nh, hd)
+    vc = v.reshape(bsz, nc, qn, nh, hd)
+    lic = li.reshape(shp)
+    lfc = lf.reshape(shp)
+
+    f_cum = jnp.cumsum(lfc, axis=2)                        # (B,C,Q,NH) inclusive
+    # D(t,s) = F_t - F_s + i_s  for t >= s
+    dmat = f_cum[:, :, :, None, :] - f_cum[:, :, None, :, :] \
+        + lic[:, :, None, :, :]                            # (B,C,Qt,Qs,NH)
+    tri = jnp.tril(jnp.ones((qn, qn), bool))
+    dmat = jnp.where(tri[None, None, :, :, None], dmat, NEG)
+    m_intra = jnp.max(dmat, axis=3)                        # (B,C,Qt,NH)
+
+    if state is None:
+        c0 = jnp.zeros((bsz, nh, hd, hd), jnp.float32)
+        n0 = jnp.zeros((bsz, nh, hd), jnp.float32)
+        m0 = jnp.full((bsz, nh), NEG, jnp.float32)
+    else:
+        c0, n0, m0 = state["c"], state["n"], state["m"]
+
+    # inter-chunk recurrence over chunk boundaries
+    f_sum = f_cum[:, :, -1, :]                             # (B,C,NH)
+    g_in = f_cum[:, :, -1:, :] - f_cum + lic               # (B,C,Q,NH) to chunk end
+
+    scale = 1.0 / math.sqrt(hd)
+
+    def step(carry, inp):
+        c, n, m = carry
+        kcc, vcc, g, fs = inp                              # per chunk (k pre-scaled)
+        m_new = jnp.maximum(fs + m, jnp.max(g, axis=1))    # (B,NH)
+        scale_old = jnp.exp(fs + m - m_new)                # (B,NH)
+        w_in = jnp.exp(g - m_new[:, None, :])              # (B,Q,NH)
+        c_new = c * scale_old[..., None, None] + jnp.einsum(
+            "bqhd,bqhe->bhde", (kcc * w_in[..., None]).astype(jnp.float32),
+            vcc.astype(jnp.float32))
+        n_new = n * scale_old[..., None] + jnp.einsum(
+            "bqhd,bqh->bhd", kcc.astype(jnp.float32), w_in)
+        return (c_new, n_new, m_new), (c, n, m)
+
+    xs = ((kc * scale).transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+          g_in.transpose(1, 0, 2, 3), f_sum.transpose(1, 0, 2))
+    (cT, nT, mT), (c_prev, n_prev, m_prev) = jax.lax.scan(step, (c0, n0, m0), xs)
+    c_prev = c_prev.transpose(1, 0, 2, 3, 4)               # (B,C,NH,HD,HD)
+    n_prev = n_prev.transpose(1, 0, 2, 3)                  # (B,C,NH,HD)
+    m_prev = m_prev.transpose(1, 0, 2)                     # (B,C,NH)
+
+    m_inter = f_cum + m_prev[:, :, None, :]                # (B,C,Q,NH)
+    m_t = jnp.maximum(m_intra, m_inter)
+    w_intra = jnp.exp(dmat - m_t[:, :, :, None, :])        # (B,C,Qt,Qs,NH)
+    w_inter = jnp.exp(m_inter - m_t)                       # (B,C,Q,NH)
+
+    qk = jnp.einsum("bcqhd,bcshd->bcqsh", qc, kc,
+                    preferred_element_type=jnp.float32) * scale
+    num = jnp.einsum("bcqsh,bcshd->bcqhd", (qk * w_intra).astype(v.dtype), vc)
+    num = num + jnp.einsum("bcqhd,bchde->bcqhe",
+                           (qc * w_inter[..., None]).astype(v.dtype),
+                           c_prev.astype(v.dtype))
+    den = (qk * w_intra).sum(axis=3)                       # (B,C,Q,NH)
+    den_inter = jnp.einsum("bcqhd,bchd->bcqh",
+                           qc.astype(jnp.float32), n_prev) * w_inter
+    den_t = den + den_inter
+    denom = jnp.maximum(jnp.abs(den_t), jnp.exp(-m_t))
+    h = num / denom[..., None].astype(num.dtype)
+    h = h.reshape(bsz, s, nh, hd)
+    return h, {"c": cT, "n": nT, "m": mT}
+
+
+def mlstm_mixer(p: Params, x: jax.Array, cfg: ArchConfig, ec: ExecConfig,
+                cache: Optional[Dict] = None, return_state: bool = False
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    bsz, s, _ = x.shape
+    di, nh = d_inner(cfg), cfg.xlstm_heads
+    hd = di // nh
+    uz = x @ p["up_proj"]
+    u, z = uz[..., :di], uz[..., di:]
+    u = shard_act(u, ("dp", None, "tp"))
+
+    if cache is None:
+        cu = _causal_conv(u, p["conv_w"], p["conv_b"])
+        new_cache = None
+        conv_cache = None
+    else:
+        conv_st = jnp.concatenate([cache["conv"], u], axis=1)
+        cu = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv_st, p["conv_w"])
+                         + p["conv_b"])[:, None, :]
+        conv_cache = conv_st[:, 1:]
+
+    q = (cu @ p["wq"]).reshape(bsz, s, nh, hd)
+    k = (cu @ p["wk"]).reshape(bsz, s, nh, hd)
+    v = (u @ p["wv"]).reshape(bsz, s, nh, hd)
+    li = (cu @ p["wi"] + p["bi"]).astype(jnp.float32)
+    lf = jax.nn.log_sigmoid((cu @ p["wf"] + p["bf"]).astype(jnp.float32))
+
+    if cache is None:
+        h, st = mlstm_chunked(q, k, v, li, lf, ec.mlstm_chunk)
+        if return_state:
+            new_cache = {**st, "conv": u[:, -3:]}
+    else:
+        # recurrent decode step
+        c, n, m = cache["c"], cache["n"], cache["m"]
+        li1, lf1 = li[:, 0], lf[:, 0]                       # (B,NH)
+        m_new = jnp.maximum(lf1 + m, li1)
+        fp = jnp.exp(lf1 + m - m_new)
+        ip = jnp.exp(li1 - m_new)
+        k1 = k[:, 0].astype(jnp.float32) / math.sqrt(hd)
+        v1 = v[:, 0].astype(jnp.float32)
+        q1 = q[:, 0].astype(jnp.float32)
+        c = c * fp[..., None, None] + ip[..., None, None] * \
+            k1[..., :, None] * v1[..., None, :]
+        n = n * fp[..., None] + ip[..., None] * k1
+        num = jnp.einsum("bhde,bhd->bhe", c, q1)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q1)),
+                          jnp.exp(-m_new))
+        h = (num / den[..., None])[:, None].astype(x.dtype)
+        new_cache = {"c": c, "n": n, "m": m_new, "conv": conv_cache}
+
+    hf = h.reshape(bsz, s, di).astype(jnp.float32)
+    hf = hf * jax.lax.rsqrt(jnp.mean(hf * hf, -1, keepdims=True) + 1e-6)
+    hf = hf * p["out_norm"].astype(jnp.float32)
+    out = (hf.astype(x.dtype) * jax.nn.silu(z)) @ p["down_proj"]
+    return out, new_cache
+
+
+def init_mlstm_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> Dict:
+    di, nh = d_inner(cfg), cfg.xlstm_heads
+    hd = di // nh
+    return {
+        "c": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, nh, hd), jnp.float32),
+        "m": jnp.full((batch, nh), NEG, jnp.float32),
+        "conv": jnp.zeros((batch, 3, di), dtype),
+    }

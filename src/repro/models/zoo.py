@@ -1,0 +1,152 @@
+"""Model registry: uniform (init / loss / prefill / decode / input_specs)
+interface over every assigned architecture family.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig, get_arch
+from repro.models import decoder as DEC
+from repro.models import encdec as ED
+from repro.models import hybrid as HY
+from repro.models import vlm as VL
+from repro.models.common import Axes, ExecConfig, Params
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[..., Any]           # (rng) -> (params, axes)
+    loss_fn: Callable[..., Any]        # (params, batch, ec) -> loss
+    prefill_fn: Callable[..., Any]     # (params, batch, ec, return_cache=False)
+    decode_fn: Callable[..., Any]      # (params, tokens, caches, ec)
+    init_caches: Callable[..., Any]    # (batch, max_len) -> cache pytree
+
+
+def build_model(arch: str | ArchConfig) -> Model:
+    cfg = get_arch(arch) if isinstance(arch, str) else arch
+    if cfg.family == "hybrid":
+        return Model(
+            cfg=cfg,
+            init=lambda rng, abstract=False: HY.init_hybrid(
+                rng, cfg, abstract=abstract),
+            loss_fn=lambda p, b, ec: HY.hybrid_loss(p, b, cfg, ec),
+            prefill_fn=lambda p, b, ec, return_cache=False:
+                HY.hybrid_prefill(p, b, cfg, ec, return_cache),
+            decode_fn=lambda p, t, c, ec: HY.hybrid_decode(p, t, c, cfg, ec),
+            init_caches=lambda batch, max_len, dtype=jnp.bfloat16:
+                HY.init_hybrid_caches(cfg, batch, max_len, dtype),
+        )
+    if cfg.family == "audio":
+        return Model(
+            cfg=cfg,
+            init=lambda rng, abstract=False: ED.init_encdec(
+                rng, cfg, abstract=abstract),
+            loss_fn=lambda p, b, ec: ED.encdec_loss(p, b, cfg, ec),
+            prefill_fn=lambda p, b, ec, return_cache=False:
+                ED.encdec_prefill(p, b, cfg, ec, return_cache),
+            decode_fn=lambda p, t, c, ec: ED.encdec_decode(p, t, c, cfg, ec),
+            init_caches=lambda batch, max_len, dtype=jnp.bfloat16:
+                ED.init_encdec_caches(cfg, batch, max_len, dtype),
+        )
+    if cfg.family == "vlm":
+        return Model(
+            cfg=cfg,
+            init=lambda rng, abstract=False: VL.init_vlm(
+                rng, cfg, abstract=abstract),
+            loss_fn=lambda p, b, ec: VL.vlm_loss(p, b, cfg, ec),
+            prefill_fn=lambda p, b, ec, return_cache=False:
+                VL.vlm_prefill(p, b, cfg, ec, return_cache),
+            decode_fn=lambda p, t, c, ec: VL.vlm_decode(p, t, c, cfg, ec),
+            init_caches=lambda batch, max_len, dtype=jnp.bfloat16:
+                VL.init_vlm_caches(cfg, batch, max_len, dtype),
+        )
+    # dense / moe / ssm uniform stacks
+    return Model(
+        cfg=cfg,
+        init=lambda rng, abstract=False: DEC.init_lm(
+            rng, cfg, abstract=abstract),
+        loss_fn=lambda p, b, ec: DEC.lm_loss(p, b, cfg, ec),
+        prefill_fn=lambda p, b, ec, return_cache=False:
+            DEC.lm_prefill(p, b, cfg, ec, return_cache),
+        decode_fn=lambda p, t, c, ec: DEC.lm_decode(p, t, c, cfg, ec),
+        init_caches=lambda batch, max_len, dtype=jnp.bfloat16:
+            DEC.init_lm_caches(cfg, batch, max_len, dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                dtype=jnp.bfloat16,
+                cache_dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Abstract inputs for one (arch, shape) cell.
+
+    train/prefill -> batch dict; decode -> {"tokens", "caches"}.
+    Modality frontends are stubs: VLM gets precomputed patch embeddings,
+    audio gets precomputed frame embeddings (per the assignment spec).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def sds(shp, dt=i32):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            st = s - cfg.num_patches
+            batch = {"patch_embeds": sds((b, cfg.num_patches, cfg.d_model), dtype),
+                     "tokens": sds((b, st))}
+            if shape.kind == "train":
+                batch["labels"] = sds((b, st))
+            return batch
+        if cfg.family == "audio":
+            batch = {"frames": sds((b, cfg.encoder_seq, cfg.d_model), dtype),
+                     "tokens": sds((b, s))}
+            if shape.kind == "train":
+                batch["labels"] = sds((b, s))
+            return batch
+        batch = {"tokens": sds((b, s))}
+        if shape.kind == "train":
+            batch["labels"] = sds((b, s))
+        return batch
+
+    # decode: one new token against caches of length s
+    model = build_model(cfg)
+    caches = jax.eval_shape(lambda: model.init_caches(b, s, cache_dtype))
+    return {"tokens": sds((b, 1)), "caches": caches}
+
+
+def abstract_params(cfg: ArchConfig) -> tuple[Dict[str, Any], Axes]:
+    """(ShapeDtypeStruct params, logical axes) without allocation."""
+    model = build_model(cfg)
+    return model.init(None, abstract=True)
+
+
+def pad_caches(caches, extra: int):
+    """Extend KV/latent cache sequence dims by `extra` zero slots (prefill
+    populates caches of prompt length; decode needs room to append).
+
+    Leading stacked-layer dims shift the sequence dim by one; the dim is
+    located per leaf name counting from the batch dim found by value."""
+    seq_keys = ("k", "v", "latent", "k_rope", "k_scale", "v_scale")
+
+    def leaf(path, x):
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if key in seq_keys and x.ndim >= 3:
+            # seq dim is the one right after batch: (..., B, S, ...) — for
+            # stacked caches (L, B, S, ...) that is ndim-3 for k/v (4d tail)
+            dim = x.ndim - 3 if key in ("k", "v") else x.ndim - 2
+            pad = [(0, 0)] * x.ndim
+            pad[dim] = (0, extra)
+            return jnp.pad(x, pad)
+        return x
+
+    return jax.tree_util.tree_map_with_path(leaf, caches)

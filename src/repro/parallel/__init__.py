@@ -1,0 +1,3 @@
+from repro.parallel.sharding import (  # noqa: F401
+    MeshAxes, batch_specs, cache_specs, make_shard_rules, param_spec,
+)

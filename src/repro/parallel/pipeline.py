@@ -1,0 +1,292 @@
+"""Pipeline-parallel train step: shard_map over a 'stage' mesh axis with
+jax.lax.ppermute microbatch handoff (GPipe fill/drain realized by AD).
+
+TPU-native adaptation of Mist's pipeline executor (paper §5.1): instead of
+per-rank torch programs with p2p sends, the stage axis is a mesh dimension.
+The *stacked-layer* parameter layout (every backbone block's params carry a
+leading L dim) makes stage partitioning a *sharding decision*: dim 0 of every
+block param is sharded over 'stage', so each stage holds L/S layers, and XLA
+SPMD continues to handle DP/TP/ZeRO *inside* each stage (the shard_map is
+partial-manual: only 'stage' is manual, 'data'/'model' stay auto).
+
+Heterogeneity notes (DESIGN.md §Arch-applicability):
+ - per-stage CKPT_i is realized by a stage-indexed remat split
+   (`jnp.where` over lax.axis_index) — heterogeneous recompute counts run
+   in one SPMD program;
+ - dp/tp/ZeRO must be uniform across stages in one SPMD program (XLA
+   constraint); Mist plans tuned for execution set `uniform_shards=True`,
+   while analysis-only plans may be fully heterogeneous;
+ - the embed/unembed compute runs on every stage and is masked (SPMD
+   uniformity); the waste is head_flops*(S-1) and is counted by the
+   roofline analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core.plan import Plan
+from repro.models import layers as L
+from repro.models.common import (ExecConfig, Params, subtree, use_rules,
+                                 softmax_xent)
+from repro.models.zoo import Model, abstract_params
+from repro.parallel import sharding as SH
+from repro.training import optimizer as OPT
+
+PIPELINE_FAMILIES = ("dense", "moe", "ssm")   # uniform-stack decoders
+
+
+def supports_pipeline(cfg: ArchConfig) -> bool:
+    return cfg.family in PIPELINE_FAMILIES
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+
+
+def stage_param_specs(params_sds, axes_table, cfg, mesh, ma, stage0,
+                      n_stages: int) -> Dict[str, NamedSharding]:
+    """Per-param NamedShardings: stacked-layer dim 0 -> 'stage'; remaining
+    dims via the single-stage TP/ZeRO rules."""
+    ep_ok = cfg.num_experts > 0 and \
+        cfg.num_experts % max(1, mesh.shape.get(ma.tp or "", 1)) == 0
+    out = {}
+    for name, sds in params_sds.items():
+        axes = axes_table[name]
+        if axes and axes[0] == "layers":
+            inner = SH.param_spec(name, sds.shape[1:], axes[1:], mesh, ma,
+                                  zero3=stage0.zero >= 3, ep_ok=ep_ok)
+            out[name] = NamedSharding(mesh, P("stage", *inner))
+        else:
+            spec = SH.param_spec(name, sds.shape, axes, mesh, ma,
+                                 zero3=stage0.zero >= 3, ep_ok=ep_ok)
+            out[name] = NamedSharding(mesh, spec)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the pipelined loss
+# ---------------------------------------------------------------------------
+
+
+def _stage_block_fn(model: Model, cfg: ArchConfig, plan: Plan):
+    """(stage-local stacked params, x, stage_idx) -> x after L/S layers.
+
+    Heterogeneous per-stage CKPT_i/AO_i are realized by `lax.switch` over
+    the stage index: each branch is the same layer stack with a *different*
+    remat/offload segmentation.  XLA lowers this to conditional HLO whose
+    selected branch executes at runtime — each stage runs only its own
+    segmentation, at the cost of S copies of the stage program in the HLO
+    (compile-time, not run-time, overhead)."""
+    from repro.models.decoder import apply_block
+    from repro.models.common import segmented_layer_scan
+
+    def branch_fn(st):
+        n_local = st.layers
+        ec = ExecConfig(
+            ckpt_layers=min(st.ckpt_layers, n_local),
+            offload_layers=int(round(st.ao * min(st.ckpt_layers, n_local))),
+            remat_policy=plan.remat_policy, attn_impl=plan.attn_impl,
+            use_pallas=plan.use_pallas,
+            sequence_parallel=plan.sequence_parallel)
+
+        def run(stacked, x, aux0):
+            def body(carry, lp):
+                h, aux = carry
+                nh, a, _ = apply_block(lp, h, cfg, ec)
+                return (nh, aux + a)
+            return segmented_layer_scan(body, (x, aux0), stacked, n_local,
+                                        ec)
+        return run
+
+    # dedupe identical stage configs into shared branches
+    keyed = [(min(s.ckpt_layers, s.layers), s.ao) for s in plan.stages]
+    uniq = sorted(set(keyed))
+    branch_of_stage = jnp.asarray([uniq.index(k) for k in keyed], jnp.int32)
+    branches = [branch_fn(plan.stages[keyed.index(k)]) for k in uniq]
+
+    def block(stacked: Params, x: jax.Array, stage_idx: jax.Array,
+              aux0: jax.Array):
+        if len(branches) == 1:
+            return branches[0](stacked, x, aux0)
+        return jax.lax.switch(branch_of_stage[stage_idx], branches,
+                              stacked, x, aux0)
+
+    return block
+
+
+def make_pipeline_loss(model: Model, plan: Plan, mesh: Mesh) -> Callable:
+    """(params, batch) -> mean loss, running the GPipe loop inside a
+    partial-manual shard_map over the 'stage' axis."""
+    cfg = model.cfg
+    assert supports_pipeline(cfg), f"pipeline unsupported for {cfg.family}"
+    S = plan.num_stages
+    G = plan.grad_accum
+    st0 = plan.stages[0]
+    block = _stage_block_fn(model, cfg, plan)
+    ma = SH.MeshAxes.from_mesh(mesh)
+    rules = SH.make_shard_rules(mesh, ma, plan.sequence_parallel)
+    from repro.models.decoder import embed_tokens, unembed_matrix, chunked_xent
+
+    ec = ExecConfig(remat_policy=plan.remat_policy, attn_impl=plan.attn_impl,
+                    use_pallas=plan.use_pallas,
+                    sequence_parallel=plan.sequence_parallel)
+
+    def pipelined(params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        """Runs per-stage (manual over 'stage'; auto over data/model)."""
+        # stage-replicated (non-stacked) params cross the shard_map boundary
+        # in f32: their gradients are psum'ed over 'stage' by shard_map AD,
+        # and the f32 reduction (a) is exact and (b) avoids an XLA:CPU
+        # AllReducePromotion crash on bf16 scalars (TPU unaffected).
+        params = {n: (p.astype(_orig_dtype[n])
+                      if p.dtype != _orig_dtype[n] else p)
+                  for n, p in params.items()}
+        stage = jax.lax.axis_index("stage")
+        stacked = subtree(params, "layers")
+        tokens, labels = batch["tokens"], batch["labels"]   # (G, b, s)
+        b, s = tokens.shape[1], tokens.shape[2]
+        d = cfg.d_model
+
+        def embed_mb(i):
+            x = embed_tokens(params, tokens[i], cfg, ec)
+            return x
+
+        T = G + S - 1
+        zero_x = jnp.zeros((b, s, d), ec.compute_dtype)
+
+        def step(carry, t):
+            x_in, loss_sum, aux_sum = carry
+            # stage 0 ingests microbatch t (if in range)
+            mb = jnp.clip(t, 0, G - 1)
+            fresh = embed_mb(mb)
+            x = jnp.where(stage == 0, fresh, x_in)
+            active = (t - stage >= 0) & (t - stage < G)
+            x, aux = block(stacked, x, stage, jnp.zeros((), jnp.float32))
+            # last stage: loss of microbatch (t - S + 1)
+            out_mb = jnp.clip(t - S + 1, 0, G - 1)
+            h = L.norm(subtree(params, "final_norm"), x, cfg)
+            lo = chunked_xent(h, unembed_matrix(params, cfg),
+                              labels[out_mb])
+            is_out = (stage == S - 1) & (t >= S - 1)
+            loss_sum = loss_sum + jnp.where(is_out, lo, 0.0)
+            aux_sum = aux_sum + jnp.where(active, aux, 0.0)
+            # hand off to next stage
+            x = jnp.where(active, x, jnp.zeros_like(x))
+            x_next = jax.lax.ppermute(
+                x, "stage", [(i, (i + 1) % S) for i in range(S)])
+            return (x_next, loss_sum, aux_sum), None
+
+        (x_last, loss_sum, aux_sum), _ = jax.lax.scan(
+            step, (zero_x, jnp.zeros((), jnp.float32),
+                   jnp.zeros((), jnp.float32)), jnp.arange(T))
+        # mean over microbatches; broadcast the last stage's loss to all
+        loss = jax.lax.psum(loss_sum, "stage") / G
+        from repro.models.decoder import AUX_COEF
+        aux = jax.lax.psum(aux_sum, "stage") / jnp.maximum(G, 1)
+        return loss + AUX_COEF * aux / cfg.num_layers
+
+    params_sds, axes_table = abstract_params(cfg)
+    _orig_dtype = {n: sds.dtype for n, sds in params_sds.items()}
+    _is_stacked = {n: bool(axes_table[n]) and axes_table[n][0] == "layers"
+                   for n in params_sds}
+    pspecs = stage_param_specs(params_sds, axes_table, cfg, mesh, ma, st0, S)
+    # partial-manual shard_map: specs mention ONLY the manual 'stage' axis;
+    # DP/TP/ZeRO shardings over the auto axes ride through unchanged (set by
+    # the outer jit in_shardings + with_sharding_constraint inside).
+    manual_spec = {n: (P("stage") if _is_stacked[n] else P())
+                   for n in params_sds}
+    in_specs = (manual_spec, {"tokens": P(), "labels": P()})
+    manual = frozenset({"stage"})
+
+    # check_vma=False: inner scans (chunked xent, layer scan) carry
+    # stage-varying values from unvarying seeds; the loss output is made
+    # replicated explicitly via the psum over 'stage'.
+    smapped = jax.shard_map(pipelined, mesh=mesh, in_specs=in_specs,
+                            out_specs=P(), axis_names=manual,
+                            check_vma=False)
+
+    def loss_fn(params, batch):
+        with use_rules(rules):
+            p32 = {n: (p.astype(jnp.float32) if not _is_stacked[n] else p)
+                   for n, p in params.items()}
+            return smapped(p32, batch)
+
+    loss_fn.param_shardings = pspecs  # type: ignore[attr-defined]
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# pipeline train step (loss + grads + AdamW), mirroring step.make_train_step
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PipelineStep:
+    fn: Callable
+    state_shardings: Any
+    batch_shape: Tuple[int, ...]      # (G, b*dp, s) expected for tokens
+    loss_fn: Callable
+
+
+def make_pipeline_train_step(model: Model, plan: Plan, mesh: Mesh,
+                             adam: OPT.AdamConfig = OPT.AdamConfig(),
+                             donate: bool = True) -> PipelineStep:
+    cfg = model.cfg
+    S = plan.num_stages
+    assert S > 1 and "stage" in mesh.axis_names
+    st0 = plan.stages[0]
+    ma = SH.MeshAxes.from_mesh(mesh)
+    loss_fn = make_pipeline_loss(model, plan, mesh)
+    pspecs = loss_fn.param_shardings
+
+    params_sds, axes_table = abstract_params(cfg)
+    state_abs = OPT.init_state(params_sds, axes_table, st0)
+
+    def opt_sh(name, leaf_spec):
+        return NamedSharding(mesh, leaf_spec)
+
+    # optimizer state mirrors the param shardings (master/mu/nu f32)
+    def entry_shardings(ratio):
+        out = {}
+        for n, sds in params_sds.items():
+            sh = pspecs[n]
+            k = OPT.split_k(n, sds.shape, axes_table, ratio)
+            if k:
+                out[n] = {"host": NamedSharding(mesh, sh.spec,
+                                                memory_kind="pinned_host"),
+                          "dev": NamedSharding(mesh, sh.spec)}
+            else:
+                out[n] = sh
+        return out
+
+    st_shardings = {
+        "step": NamedSharding(mesh, P()),
+        "params": dict(pspecs),
+        "master": entry_shardings(st0.wo),
+        "mu": entry_shardings(st0.oo),
+        "nu": entry_shardings(st0.oo),
+    }
+
+    def train_step(state, batch):
+        params = state["params"]
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch))(params)
+        grads = {n: g.astype(jnp.float32) for n, g in grads.items()}
+        new_state, om = OPT.adam_update(state, grads, adam, st_shardings)
+        return new_state, {"loss": loss, **om, "step": new_state["step"]}
+
+    jit_fn = jax.jit(train_step, in_shardings=(st_shardings, None),
+                     donate_argnums=(0,) if donate else ())
+    b_local = st0.micro_batch * st0.dp
+    return PipelineStep(fn=jit_fn, state_shardings=st_shardings,
+                        batch_shape=(plan.grad_accum, b_local, 0),
+                        loss_fn=loss_fn)

@@ -1,0 +1,248 @@
+"""Sharding rules: logical param/activation axes -> physical mesh axes.
+
+All parallelism in the runtime is *data, not code*: a Plan maps to
+NamedShardings for params / optimizer states / gradients / caches, XLA's SPMD
+partitioner inserts the collectives (TP all-reduce pairs, ZeRO all-gather /
+reduce-scatter, sequence-parallel resharding).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core.plan import Plan, StageConfig
+from repro.models.common import Axes, ShardRules
+
+# logical axes eligible for tensor parallelism, in priority order
+TP_PRIORITY = ("expert", "mlp", "heads", "inner2", "inner", "kv_heads",
+               "vocab")
+# leading stacked-scan dims — never sharded (scan slices them)
+LAYER_AXES = ("layers", "layers1", "layers2")
+
+
+@dataclass(frozen=True)
+class MeshAxes:
+    """Physical axis names of the active mesh."""
+    dp: Tuple[str, ...] = ("data",)      # data parallelism (+ "pod" outer)
+    tp: Optional[str] = "model"          # tensor parallelism
+    fsdp: Tuple[str, ...] = ("data",)    # ZeRO sharding axis (== dp here)
+
+    @staticmethod
+    def from_mesh(mesh: Mesh) -> "MeshAxes":
+        names = tuple(mesh.axis_names)
+        dp = tuple(n for n in names if n in ("pod", "data", "replica"))
+        tp = "model" if "model" in names else None
+        return MeshAxes(dp=dp or (names[0],), tp=tp, fsdp=dp or (names[0],))
+
+    @staticmethod
+    def for_plan(mesh: Mesh, tp_size: int) -> "MeshAxes":
+        """Plan-aware axis mapping: a tp=1 plan folds the 'model' axis into
+        DP/FSDP (the production mesh shape is fixed; which axes mean what is
+        the plan's decision — e.g. indivisible-head archs want tp=1 and
+        pure-FSDP over all 256 chips)."""
+        ma = MeshAxes.from_mesh(mesh)
+        if tp_size == 1 and ma.tp is not None:
+            dp = ma.dp + (ma.tp,)
+            return MeshAxes(dp=dp, tp=None, fsdp=dp)
+        return ma
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def choose_tp_dim(axes: Sequence[Optional[str]], shape: Sequence[int],
+                  tp_size: int, ep_ok: bool) -> Optional[int]:
+    """Pick the dim to shard over the model axis (None -> replicate)."""
+    if tp_size <= 1:
+        return None
+    best = None
+    best_rank = len(TP_PRIORITY)
+    for i, (ax, dim) in enumerate(zip(axes, shape)):
+        if ax is None or ax in LAYER_AXES or ax not in TP_PRIORITY:
+            continue
+        if ax == "expert" and not ep_ok:
+            continue
+        if dim % tp_size != 0:
+            continue
+        rank = TP_PRIORITY.index(ax)
+        if rank < best_rank:
+            best, best_rank = i, rank
+    return best
+
+
+def choose_fsdp_dim(axes: Sequence[Optional[str]], shape: Sequence[int],
+                    fsdp_size: int, taken: Optional[int]) -> Optional[int]:
+    """Largest free dim divisible by the ZeRO axis size."""
+    if fsdp_size <= 1:
+        return None
+    best, best_dim = None, 0
+    for i, (ax, dim) in enumerate(zip(axes, shape)):
+        if i == taken or ax in LAYER_AXES:
+            continue
+        if dim % fsdp_size != 0:
+            continue
+        if dim > best_dim:
+            best, best_dim = i, dim
+    return best
+
+
+def param_spec(name: str, shape: Sequence[int], axes: Sequence[Optional[str]],
+               mesh: Mesh, ma: MeshAxes, *, zero3: bool, ep_ok: bool) -> P:
+    tp_size = _axis_size(mesh, ma.tp)
+    spec: list = [None] * len(shape)
+    ti = choose_tp_dim(axes, shape, tp_size, ep_ok)
+    if ti is not None:
+        spec[ti] = ma.tp
+    if zero3:
+        fi = choose_fsdp_dim(axes, shape, _axis_size(mesh, ma.fsdp), ti)
+        if fi is not None:
+            spec[fi] = ma.fsdp if len(ma.fsdp) > 1 else ma.fsdp[0]
+    return P(*spec)
+
+
+def opt_spec(name: str, shape, axes, mesh: Mesh, ma: MeshAxes, *,
+             zero: int, ep_ok: bool) -> P:
+    """Optimizer-state / master-weight sharding (ZeRO>=1 shards over fsdp)."""
+    return param_spec(name, shape, axes, mesh, ma, zero3=zero >= 1,
+                      ep_ok=ep_ok)
+
+
+def grad_spec(name: str, shape, axes, mesh: Mesh, ma: MeshAxes, *,
+              zero: int, ep_ok: bool) -> P:
+    """Gradient sharding: ZeRO>=2 reduce-scatters grads over fsdp."""
+    return param_spec(name, shape, axes, mesh, ma, zero3=zero >= 2,
+                      ep_ok=ep_ok)
+
+
+def build_param_shardings(axes_table: Axes, params, cfg: ArchConfig,
+                          mesh: Mesh, ma: MeshAxes, stage: StageConfig
+                          ) -> Dict[str, NamedSharding]:
+    ep_ok = cfg.num_experts > 0 and \
+        cfg.num_experts % max(1, _axis_size(mesh, ma.tp)) == 0
+    out = {}
+    for name, sds in params.items():
+        spec = param_spec(name, sds.shape, axes_table[name], mesh, ma,
+                          zero3=stage.zero >= 3, ep_ok=ep_ok)
+        out[name] = NamedSharding(mesh, spec)
+    return out
+
+
+def make_shard_rules(mesh: Mesh, ma: MeshAxes, sequence_parallel: bool
+                     ) -> ShardRules:
+    tp_size = _axis_size(mesh, ma.tp)
+    mapping: Dict[str, Any] = {
+        "dp": ma.dp if len(ma.dp) > 1 else ma.dp[0],
+        "tp": ma.tp,
+        "sp": ma.tp if (sequence_parallel and tp_size > 1) else None,
+        "expert": ma.tp,
+    }
+    return ShardRules(mapping=mapping, mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# Cache (serving) shardings
+# ---------------------------------------------------------------------------
+
+_SEQ_LEAF_SEQ_DIM = {"k": 1, "v": 1, "latent": 1, "k_rope": 1,
+                     "k_scale": 1, "v_scale": 1}
+
+
+def cache_specs(caches, mesh: Mesh, ma: MeshAxes, batch: int,
+                lead_dims: int = 1) -> Any:
+    """Shardings for a stacked cache pytree.
+
+    The batch dim is located by value (stacked lead dims vary per family).
+    batch divisible by dp -> shard batch; else shard the KV sequence dim over
+    dp (flash-decoding-style sequence-parallel KV for long_500k).
+    Head/state dims shard over tp when divisible.
+    """
+    dp_size = _axis_size(mesh, ma.dp)
+    tp_size = _axis_size(mesh, ma.tp)
+    dp_name = ma.dp if len(ma.dp) > 1 else ma.dp[0]
+    shard_batch = batch % dp_size == 0 and dp_size > 1
+
+    def leaf_spec(path, sds):
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        nd = len(sds.shape)
+        spec: list = [None] * nd
+        # locate the batch dim by value (first exact match)
+        bdim = next((i for i, d in enumerate(sds.shape) if d == batch), None)
+        if bdim is None:
+            return P(*spec)
+        if shard_batch:
+            spec[bdim] = dp_name
+        elif key in _SEQ_LEAF_SEQ_DIM and nd > bdim + 1:
+            spec[bdim + 1] = dp_name   # sequence-parallel KV
+        # tp on the canonical head/state dim
+        if tp_size > 1:
+            if key in ("k", "v") and nd >= bdim + 3 \
+                    and sds.shape[nd - 2] % tp_size == 0:
+                spec[nd - 2] = ma.tp       # (…,B,S,KV,hd) -> KV heads
+            elif key in ("k", "v") and nd > bdim + 1 \
+                    and spec[bdim + 1] is None \
+                    and sds.shape[bdim + 1] % tp_size == 0:
+                # GQA/MHA head count not divisible by tp: shard the KV
+                # SEQUENCE over 'model' instead (flash-decoding style) —
+                # the dominant store at decode_32k/long_500k scale
+                spec[bdim + 1] = ma.tp
+            elif key in ("ssm", "c", "n", "m") and nd > bdim + 1 \
+                    and sds.shape[bdim + 1] % tp_size == 0:
+                spec[bdim + 1] = ma.tp     # state heads
+            elif key == "conv" and sds.shape[nd - 1] % tp_size == 0:
+                spec[nd - 1] = ma.tp       # conv channels
+            elif key in ("latent", "k_rope") and spec[bdim + 1] is None \
+                    and nd > bdim + 1 \
+                    and sds.shape[bdim + 1] % tp_size == 0:
+                spec[bdim + 1] = ma.tp     # MLA latent: sequence over tp
+            elif key in ("k_scale", "v_scale"):
+                # mirror the k/v decision: kv-head dim (last) if divisible,
+                # else the sequence dim
+                if sds.shape[nd - 1] % tp_size == 0:
+                    spec[nd - 1] = ma.tp
+                elif spec[bdim + 1] is None and nd > bdim + 1 \
+                        and sds.shape[bdim + 1] % tp_size == 0:
+                    spec[bdim + 1] = ma.tp
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, s: NamedSharding(mesh, leaf_spec(p, s)), caches)
+
+
+def cache_update_mode(cache_sh, ma: MeshAxes) -> str:
+    """'onehot' when any KV/latent cache leaf has its sequence dim sharded
+    over the model axis (a DUS there would be replicated by GSPMD)."""
+    def seq_sharded(path, sh):
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if key not in _SEQ_LEAF_SEQ_DIM or not hasattr(sh, "spec"):
+            return False
+        return any(ax == ma.tp for ax in sh.spec if ax is not None)
+
+    leaves = jax.tree_util.tree_leaves_with_path(
+        cache_sh, is_leaf=lambda x: hasattr(x, "spec"))
+    return "onehot" if any(seq_sharded(p, s) for p, s in leaves) else "dus"
+
+
+def batch_specs(batch, mesh: Mesh, ma: MeshAxes) -> Any:
+    """Input batch: leading (global) batch dim over dp."""
+    dp_name = ma.dp if len(ma.dp) > 1 else ma.dp[0]
+
+    def leaf(sds):
+        spec = [None] * len(sds.shape)
+        if len(sds.shape) >= 1:
+            spec[0] = dp_name
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(leaf, batch)

@@ -1,0 +1,494 @@
+"""Trip-count-aware HLO analysis.
+
+``compiled.cost_analysis()`` does NOT multiply loop-body costs by trip count
+(verified empirically: an 80-layer scan reports one layer's FLOPs), so the
+roofline must be derived by walking the post-SPMD HLO call graph: while-loop
+bodies are weighted by their trip counts, fusions are treated as single
+kernels (operand+output bytes = HBM traffic), dots contribute MXU FLOPs, and
+collectives contribute per-device wire bytes using ring-algorithm factors.
+
+All quantities are PER DEVICE (post-SPMD HLO is the per-device program).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPCODE_RE = re.compile(r"\s*([a-z][a-z0-9\-]*)\((.*)$", re.S)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+
+
+def _parse_op_line(line: str):
+    """'%name = TYPE opcode(operands), attrs' -> (name, type, opcode, rest).
+
+    TYPE may be a tuple spanning '( ... )' with layout braces and
+    '/*index=k*/' comments, so it is extracted by paren matching, not regex.
+    """
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        # ops can appear without % in some printers
+        if not re.match(r"[\w.\-]+ = ", s):
+            return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[:eq].lstrip("%")
+    rem = s[eq + 3:]
+    if rem.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rem):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    type_str, rem2 = rem[:i + 1], rem[i + 1:]
+                    break
+        else:
+            return None
+    else:
+        sp = rem.find(" ")
+        if sp < 0:
+            return None
+        type_str, rem2 = rem[:sp], rem[sp:]
+    m = _OPCODE_RE.match(rem2)
+    if not m:
+        return None
+    return name, type_str, m.group(1), m.group(2)
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    out_type: str
+    rest: str  # text after the opening paren (operands + attributes)
+
+    def operand_names(self) -> List[str]:
+        # operands are up to the matching close paren; attrs follow after ")"
+        depth = 1
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    inner = self.rest[:i]
+                    break
+        else:
+            inner = self.rest
+        names = re.findall(r"%([\w.\-]+)", inner)
+        return names
+
+    def attr(self, key: str) -> Optional[str]:
+        m = re.search(key + r"=((\{[^}]*\})|(\[[^\]]*\](<=\[[\d,]+\])?)|([\w.\-%]+))",
+                      self.rest)
+        return m.group(1) if m else None
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: Dict[str, Op] = field(default_factory=dict)
+    order: List[str] = field(default_factory=list)
+    root: Optional[str] = None
+
+    def accessed_input_bytes(self, operand_types: List[str]) -> int:
+        """Bytes actually read from the fusion's operands: a parameter
+        consumed only by dynamic-slice ops contributes the slice bytes, not
+        the full buffer (models HBM traffic of scan-sliced stacked params)."""
+        # parameter index -> param op name
+        by_idx: Dict[int, str] = {}
+        for nm in self.order:
+            op = self.ops[nm]
+            if op.opcode == "parameter":
+                m = re.match(r"(\d+)", op.rest)
+                if m:
+                    by_idx[int(m.group(1))] = nm
+        total = 0
+        for i, t in enumerate(operand_types):
+            pname = by_idx.get(i)
+            full = _shape_bytes(t)
+            if pname is None:
+                total += full
+                continue
+            uses = [self.ops[nm] for nm in self.order
+                    if pname in self.ops[nm].operand_names()
+                    and self.ops[nm].opcode != "parameter"]
+            if uses and all(u.opcode in ("dynamic-slice", "gather")
+                            for u in uses):
+                total += sum(_shape_bytes(u.out_type) for u in uses)
+            else:
+                total += full
+        return total
+
+    def written_output_bytes(self) -> int:
+        """Bytes actually written: a dynamic-update-slice root writes only
+        the update slice (in-place)."""
+        r = self.ops.get(self.root or "")
+        if r is None:
+            return -1
+        if r.opcode == "dynamic-update-slice":
+            names = r.operand_names()
+            if len(names) >= 2:
+                upd = self.ops.get(names[1])
+                if upd is not None:
+                    return _shape_bytes(upd.out_type)
+        if r.opcode == "tuple":
+            total = 0
+            for nm in r.operand_names():
+                o = self.ops.get(nm)
+                if o is None:
+                    continue
+                if o.opcode == "dynamic-update-slice":
+                    upds = o.operand_names()
+                    u = self.ops.get(upds[1]) if len(upds) > 1 else None
+                    total += _shape_bytes(u.out_type) if u is not None \
+                        else _shape_bytes(o.out_type)
+                else:
+                    total += _shape_bytes(o.out_type)
+            return total
+        return -1
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_name = None
+    for line in text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc and ("->" in line):
+            cur = Computation(mc.group(1))
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry_name = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        parsed = _parse_op_line(line)
+        if parsed:
+            name, type_str, opcode, rest = parsed
+            op = Op(name=name, out_type=type_str, opcode=opcode, rest=rest)
+            cur.ops[op.name] = op
+            cur.order.append(op.name)
+            if line.lstrip().startswith("ROOT"):
+                cur.root = op.name
+    if entry_name:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Trip count from the constant feeding the root compare of the loop
+    condition (fallback: largest s32 constant anywhere in the condition)."""
+    def const_val(name: str):
+        op = cond.ops.get(name)
+        if op is not None and op.opcode == "constant" \
+                and op.out_type.startswith("s32"):
+            m = re.match(r"(\d+)", op.rest)
+            if m:
+                return int(m.group(1))
+        return None
+
+    root = cond.ops.get(cond.root or "")
+    if root is not None and root.opcode in ("compare", "fusion"):
+        for nm in root.operand_names():
+            v = const_val(nm)
+            if v is not None:
+                return max(1, v)
+    best = 1
+    for opn in cond.order:
+        v = const_val(opn)
+        if v is not None:
+            best = max(best, v)
+    return best
+
+
+def _group_size(op: Op, default: int) -> int:
+    rg = op.attr("replica_groups")
+    if not rg:
+        return default
+    if rg.startswith("{{"):
+        first = rg[2:].split("}")[0]
+        return max(1, first.count(",") + 1)
+    m = re.match(r"\[([\d,]+)\]", rg)
+    if m:
+        dims = [int(x) for x in m.group(1).split(",")]
+        return dims[-1] if dims else default
+    return default
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    """2 * prod(output dims) * prod(contracting dims of lhs)."""
+    out = _shape_dims(op.out_type)
+    if out is None:
+        return 0.0
+    _, odims = out
+    names = op.operand_names()
+    if not names:
+        return 0.0
+    lhs = comp.ops.get(names[0])
+    if lhs is None:
+        return 0.0
+    lshape = _shape_dims(lhs.out_type)
+    if lshape is None:
+        return 0.0
+    _, ldims = lshape
+    cd = op.attr("lhs_contracting_dims")
+    contract = 1
+    if cd:
+        for i in re.findall(r"\d+", cd):
+            ii = int(i)
+            if ii < len(ldims):
+                contract *= ldims[ii]
+    return 2.0 * math.prod(odims) * contract
+
+
+@dataclass
+class HLOStats:
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0             # fusion-boundary operand+output bytes
+    copy_bytes: float = 0.0            # loop-state copies (XLA:CPU artifact;
+    #                                    elided by buffer aliasing on TPU —
+    #                                    excluded from the memory term)
+    collective_wire_bytes: float = 0.0  # per-device, ring-adjusted
+    collective_by_kind: Dict[str, float] = field(default_factory=dict)
+    collective_msg_bytes: float = 0.0  # raw operand bytes (un-adjusted)
+    n_collectives: int = 0
+    # dtype-corrected wire bytes: XLA:CPU promotes bf16 collectives to f32
+    # (AllReducePromotion / FloatNormalization); collectives that are
+    # convert-wrapped (bf16 -> f32 -> coll -> bf16) count at half width,
+    # matching the native-bf16 TPU target
+    collective_wire_bytes_tpu: float = 0.0
+
+    def add(self, other: "HLOStats", mult: float = 1.0):
+        self.dot_flops += other.dot_flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.copy_bytes += other.copy_bytes * mult
+        self.collective_wire_bytes += other.collective_wire_bytes * mult
+        self.collective_msg_bytes += other.collective_msg_bytes * mult
+        self.collective_wire_bytes_tpu += \
+            other.collective_wire_bytes_tpu * mult
+        self.n_collectives += int(other.n_collectives * mult)
+        for k, v in other.collective_by_kind.items():
+            self.collective_by_kind[k] = \
+                self.collective_by_kind.get(k, 0.0) + v * mult
+
+
+# opcodes whose called computations are "applies" (tiny), not control flow
+_APPLY_ATTRS = ("to_apply", "called_computations")
+
+
+def analyze(text: str, default_group: int = 1) -> HLOStats:
+    comps = parse_hlo(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return HLOStats()
+    memo: Dict[str, HLOStats] = {}
+
+    def comp_stats(comp: Computation) -> HLOStats:
+        if comp.name in memo:
+            return memo[comp.name]
+        st = HLOStats()
+        for opn in comp.order:
+            op = comp.ops[opn]
+            oc = op.opcode
+            if oc == "while":
+                body_n = op.attr("body")
+                cond_n = op.attr("condition")
+                body = comps.get((body_n or "").lstrip("%"))
+                cond = comps.get((cond_n or "").lstrip("%"))
+                trips = _trip_count(cond) if cond else 1
+                if body:
+                    st.add(comp_stats(body), trips)
+                if cond:
+                    st.add(comp_stats(cond), trips)
+                continue
+            if oc == "conditional":
+                for bn in re.findall(r"%([\w.\-]+)",
+                                     op.attr("branch_computations") or ""):
+                    b = comps.get(bn)
+                    if b:
+                        st.add(comp_stats(b), 1.0)
+                continue
+            if oc == "call":
+                tgt = comps.get((op.attr("to_apply") or "").lstrip("%"))
+                if tgt:
+                    st.add(comp_stats(tgt), 1.0)
+                continue
+            # kernel-boundary bytes: operands + output
+            ob = _shape_bytes(op.out_type)
+            operand_types = []
+            inb = 0
+            for nm in op.operand_names():
+                d = comp.ops.get(nm)
+                if d is not None:
+                    operand_types.append(d.out_type)
+                    inb += _shape_bytes(d.out_type)
+            if oc == "fusion":
+                # count dots *inside* the fused computation for FLOPs, and
+                # slice-aware accessed bytes instead of full buffer sizes
+                tgt = comps.get((op.attr("calls") or "").lstrip("%"))
+                if tgt:
+                    inner = comp_stats(tgt)
+                    st.dot_flops += inner.dot_flops
+                    inb = tgt.accessed_input_bytes(operand_types)
+                    wb = tgt.written_output_bytes()
+                    if wb >= 0:
+                        ob = wb
+                st.hbm_bytes += ob + inb
+                continue
+            if oc == "dot":
+                st.dot_flops += _dot_flops(op, comp)
+                st.hbm_bytes += ob + inb
+                continue
+            base = oc.replace("-start", "")
+            if base in COLLECTIVES:
+                g = _group_size(op, default_group)
+                msg = inb if base != "all-gather" else inb
+                if base == "all-reduce":
+                    wire = 2.0 * inb * (g - 1) / max(g, 1)
+                elif base == "all-gather":
+                    wire = inb * (g - 1)
+                elif base in ("reduce-scatter", "all-to-all"):
+                    wire = inb * (g - 1) / max(g, 1)
+                else:  # collective-permute
+                    wire = inb
+                st.collective_wire_bytes += wire
+                # bf16-promotion detection: f32 collective whose operand is
+                # (or fuses) a convert from bf16 counts at half width on the
+                # native-bf16 TPU target
+                wire_tpu = wire
+                if "f32[" in op.out_type:
+                    # AllReducePromotion marks its reducer "*_promoted";
+                    # FloatNormalization feeds collectives through convert
+                    # fusions — both are CPU-only bf16 legalizations that a
+                    # native-bf16 TPU target does not emit
+                    promoted = "promoted" in op.rest or any(
+                        "convert" in nm for nm in op.operand_names())
+                    if promoted:
+                        wire_tpu = wire / 2.0
+                st.collective_wire_bytes_tpu += wire_tpu
+                st.collective_msg_bytes += msg
+                st.n_collectives += 1
+                st.collective_by_kind[base] = \
+                    st.collective_by_kind.get(base, 0.0) + wire
+                st.hbm_bytes += ob + inb
+                continue
+            if oc in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "after-all", "partition-id", "replica-id",
+                      "done", "all-gather-done", "all-reduce-done",
+                      "collective-permute-done", "copy-done", "async-done"):
+                continue
+            if oc in ("copy", "copy-start"):
+                # loop-state / resharding copies: real on CPU, elided by
+                # buffer aliasing on TPU -> tracked separately
+                st.copy_bytes += ob + inb
+                continue
+            # plain (unfused) compute op: counts as its own kernel
+            st.hbm_bytes += ob + inb
+        memo[comp.name] = st
+        return st
+
+    return comp_stats(entry)
+
+
+# ---------------------------------------------------------------------------
+# Perf-iteration tooling: where do the collective bytes come from?
+# ---------------------------------------------------------------------------
+
+
+def collective_histogram(text: str, top: int = 20):
+    """Trip-count-weighted (kind, operand-shape) histogram of collective
+    wire bytes — the profile the §Perf hillclimb iterates on."""
+    comps = parse_hlo(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return []
+    hist: Dict[Tuple[str, str], float] = {}
+    count: Dict[Tuple[str, str], int] = {}
+
+    def walk(comp: Computation, mult: float):
+        for opn in comp.order:
+            op = comp.ops[opn]
+            oc = op.opcode
+            if oc == "while":
+                body = comps.get((op.attr("body") or "").lstrip("%"))
+                cond = comps.get((op.attr("condition") or "").lstrip("%"))
+                trips = _trip_count(cond) if cond else 1
+                if body:
+                    walk(body, mult * trips)
+                continue
+            if oc == "call":
+                tgt = comps.get((op.attr("to_apply") or "").lstrip("%"))
+                if tgt:
+                    walk(tgt, mult)
+                continue
+            if oc == "fusion":
+                continue
+            base = oc.replace("-start", "")
+            if base in COLLECTIVES:
+                inb = 0
+                shapes = []
+                for nm in op.operand_names():
+                    d = comp.ops.get(nm)
+                    if d is not None:
+                        inb += _shape_bytes(d.out_type)
+                        shapes.append(d.out_type.split("{")[0])
+                g = _group_size(op, 1)
+                if base == "all-reduce":
+                    wire = 2.0 * inb * (g - 1) / max(g, 1)
+                elif base == "all-gather":
+                    wire = inb * (g - 1)
+                elif base in ("reduce-scatter", "all-to-all"):
+                    wire = inb * (g - 1) / max(g, 1)
+                else:
+                    wire = inb
+                key = (base, ",".join(shapes[:2]) + f" g={g}")
+                hist[key] = hist.get(key, 0.0) + wire * mult
+                count[key] = count.get(key, 0) + int(mult)
+
+    walk(entry, 1.0)
+    rows = sorted(hist.items(), key=lambda kv: -kv[1])[:top]
+    return [(k[0], k[1], v, count[k]) for k, v in rows]

@@ -1,0 +1,111 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+    compute term    = HLO dot FLOPs / peak_FLOP/s          (per device)
+    memory term     = HLO kernel-boundary bytes / HBM_bw   (per device)
+    collective term = collective wire bytes / ICI link bw  (per device)
+
+All inputs are per-device (post-SPMD HLO).  MODEL_FLOPS = 6*N*D (dense) or
+6*N_active*D (MoE) checks how much of compiled compute is useful (remat /
+redundancy waste shows up as HLO/MODEL > 1 per device share).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass
+from typing import Dict, Optional
+
+from repro.core.hardware import V5E, HardwareSpec
+from repro.perf.hloanalysis import HLOStats, analyze
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device seconds
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    # raw terms
+    hlo_dot_flops: float          # per device
+    hlo_bytes: float              # per device
+    collective_wire_bytes: float  # per device
+    collective_by_kind: Dict[str, float]
+    # usefulness
+    model_flops_global: float     # 6*N*D (or 6*N_act*D), x3 set by caller
+    useful_ratio: float           # model_flops/(chips*hlo_dot_flops)
+    # roofline fraction: useful work / (bound * peak)
+    roofline_fraction: float
+    # raw xla numbers for cross-checking
+    xla_flops: Optional[float] = None
+    xla_bytes: Optional[float] = None
+    # TPU-target analytic memory term (the artifact's HBM bytes reflect
+    # XLA:CPU fusion boundaries + f32 legalization)
+    t_memory_analytic: Optional[float] = None
+    t_collective_tpu: Optional[float] = None  # bf16-promotion corrected
+    roofline_fraction_tpu: Optional[float] = None
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self), indent=2)
+
+
+def report_from_stats(stats: HLOStats, *, arch: str, shape: str, mesh: str,
+                      chips: int, model_flops_global: float,
+                      hw: HardwareSpec = V5E,
+                      xla_cost: Optional[dict] = None,
+                      hbm_bytes_analytic: Optional[float] = None
+                      ) -> RooflineReport:
+    t_c = stats.dot_flops / hw.peak_flops_bf16
+    t_m = stats.hbm_bytes / hw.hbm_bw
+    t_x = stats.collective_wire_bytes / hw.ici_bw_total
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    useful = model_flops_global / max(1.0, stats.dot_flops * chips)
+    # achievable step time >= max(terms); usable fraction of peak compute:
+    t_bound = max(t_c, t_m, t_x)
+    frac = (model_flops_global / chips / hw.peak_flops_bf16) / max(t_bound,
+                                                                   1e-12)
+    t_m_tpu = None
+    frac_tpu = None
+    t_x_tpu = (stats.collective_wire_bytes_tpu / hw.ici_bw_total
+               if stats.collective_wire_bytes_tpu else t_x)
+    if hbm_bytes_analytic is not None:
+        t_m_tpu = hbm_bytes_analytic / hw.hbm_bw
+        bound_tpu = max(t_c, t_m_tpu, t_x_tpu)
+        frac_tpu = min(1.0, (model_flops_global / chips
+                             / hw.peak_flops_bf16) / max(bound_tpu, 1e-12))
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh, chips=chips,
+        t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        bottleneck=bottleneck,
+        hlo_dot_flops=stats.dot_flops, hlo_bytes=stats.hbm_bytes,
+        collective_wire_bytes=stats.collective_wire_bytes,
+        collective_by_kind=dict(stats.collective_by_kind),
+        model_flops_global=model_flops_global,
+        useful_ratio=useful,
+        roofline_fraction=min(frac, 1.0),
+        xla_flops=(xla_cost or {}).get("flops"),
+        xla_bytes=(xla_cost or {}).get("bytes accessed"),
+        t_memory_analytic=t_m_tpu,
+        t_collective_tpu=t_x_tpu,
+        roofline_fraction_tpu=frac_tpu,
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS for one step of this cell (6*N*D for training;
+    2*N*D for prefill; 2*N*new_tokens*D-style for decode)."""
+    n = cfg.param_count(active_only=True)
+    # exclude embedding table from the 6ND rule-of-thumb? Common practice
+    # keeps full N; we keep full N and note it in EXPERIMENTS.md.
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,4 @@
+from repro.training.optimizer import AdamConfig, adam_update, init_state  # noqa: F401
+from repro.training.step import (  # noqa: F401
+    make_prefill_step, make_serve_step, make_train_step, init_sharded_state,
+)

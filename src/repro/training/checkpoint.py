@@ -1,0 +1,187 @@
+"""Sharded, async, elastic checkpointing.
+
+Layout (one directory per step):
+
+    <dir>/step_000042/
+        MANIFEST.json        step, arch, plan, mesh shape, leaf index
+        <flat-key>.npy       one file per state leaf (host-local full array
+                             here; per-shard files on a multi-host runtime —
+                             the manifest records the sharding so either
+                             layout restores)
+
+Fault-tolerance properties:
+  * atomic: written to `<dir>/.tmp_<step>` then renamed — a crash mid-save
+    never corrupts the latest checkpoint;
+  * async: `save_async` snapshots device arrays to host (blocking only on
+    the device->host copy) and writes in a background thread, double-
+    buffered so at most one save is in flight;
+  * elastic: `restore` takes *target* shardings — restoring onto a
+    different mesh / plan re-shards via jax.device_put (elastic scaling,
+    e.g. resume a 256-chip run on 512 chips);
+  * self-describing: the manifest stores the Plan so a restarted job can
+    rebuild the exact step function.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+SEP = "::"   # flat-key separator (param names already contain '/')
+
+
+def _flatten(tree: Any, prefix: str = "") -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{SEP}{k}" if prefix else k))
+        return out
+    out[prefix] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, Any]) -> Any:
+    root: Dict[str, Any] = {}
+    for key, v in flat.items():
+        parts = key.split(SEP)
+        cur = root
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = v
+    return root
+
+
+class Checkpointer:
+    def __init__(self, directory: str | os.PathLike, keep: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._last_error: Optional[BaseException] = None
+
+    # -- save -----------------------------------------------------------------
+    def save(self, step: int, state: Any, meta: Optional[Dict] = None
+             ) -> pathlib.Path:
+        host = jax.tree.map(np.asarray, state)    # device->host snapshot
+        return self._write(step, host, meta or {})
+
+    def save_async(self, step: int, state: Any, meta: Optional[Dict] = None
+                   ) -> None:
+        """Snapshot synchronously (cheap D2H), write in the background."""
+        self.wait()                                # double-buffer: one in flight
+        host = jax.tree.map(np.asarray, state)
+        meta = dict(meta or {})
+
+        def work():
+            try:
+                self._write(step, host, meta)
+            except BaseException as e:             # surfaced on next wait()
+                self._last_error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._last_error is not None:
+            e, self._last_error = self._last_error, None
+            raise e
+
+    def _write(self, step: int, host_state: Any, meta: Dict) -> pathlib.Path:
+        flat = _flatten(host_state)
+        tmp = self.dir / f".tmp_{step:09d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        index = {}
+        for key, arr in flat.items():
+            arr = np.asarray(arr)
+            fname = f"{abs(hash(key)) & 0xFFFFFFFF:08x}_{len(index):05d}.npy"
+            dtype = str(arr.dtype)
+            if dtype == "bfloat16":      # not a native numpy dtype: store
+                np.save(tmp / fname, arr.view(np.uint16))   # raw bits
+            else:
+                np.save(tmp / fname, arr)
+            index[key] = {"file": fname, "shape": list(arr.shape),
+                          "dtype": dtype}
+        manifest = {"step": step, "time": time.time(), "leaves": index,
+                    **meta}
+        (tmp / "MANIFEST.json").write_text(json.dumps(manifest, indent=2))
+        final = self.dir / f"step_{step:09d}"
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s:09d}", ignore_errors=True)
+
+    # -- restore ----------------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            try:
+                out.append(int(p.name.split("_")[1]))
+            except (IndexError, ValueError):
+                continue
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def manifest(self, step: int) -> Dict:
+        p = self.dir / f"step_{step:09d}" / "MANIFEST.json"
+        return json.loads(p.read_text())
+
+    def restore(self, step: Optional[int] = None, *,
+                shardings: Any = None) -> Tuple[int, Any, Dict]:
+        """Load a checkpoint; `shardings` (a pytree of NamedShardings
+        mirroring the state) re-shards elastically onto the current mesh.
+
+        Returns (step, state, manifest).
+        """
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step:09d}"
+        manifest = json.loads((d / "MANIFEST.json").read_text())
+        flat = {}
+        for key, ent in manifest["leaves"].items():
+            arr = np.load(d / ent["file"])
+            if ent["dtype"] == "bfloat16":
+                import ml_dtypes
+                arr = arr.view(ml_dtypes.bfloat16)
+            flat[key] = arr
+        state = _unflatten(flat)
+        if shardings is not None:
+            state = _reshard(state, shardings)
+        return step, state, manifest
+
+
+def _reshard(state: Any, shardings: Any) -> Any:
+    """Elastic re-shard: place host arrays per target shardings (which may
+    belong to a different mesh than the one that saved them)."""
+    flat_s = _flatten(state)
+    flat_h = _flatten(shardings)
+    out = {}
+    for k, arr in flat_s.items():
+        sh = flat_h.get(k)
+        if sh is None:
+            out[k] = jax.numpy.asarray(arr)
+        else:
+            out[k] = jax.device_put(arr, sh)
+    return _unflatten(out)

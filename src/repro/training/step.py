@@ -1,0 +1,226 @@
+"""Step builders: Plan -> jitted train_step / serve_step with shardings.
+
+``make_train_step`` realizes a single-stage plan (DP x TP x SP, ZeRO-0..3,
+CKPT/AO remat segmentation, WO/OO host offload, optional int8 gradient
+compression, gradient accumulation).  Pipeline (S>1) plans go through
+``repro.parallel.pipeline``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.plan import Plan, StageConfig
+from repro.models.common import ExecConfig, use_rules
+from repro.models.zoo import Model, abstract_params, input_specs
+from repro.parallel import sharding as SH
+from repro.training import optimizer as OPT
+
+
+def stage_exec_config(plan: Plan, stage: StageConfig, cfg: ArchConfig
+                      ) -> ExecConfig:
+    lyr = stage.layers
+    return ExecConfig(
+        ckpt_layers=min(stage.ckpt_layers, lyr),
+        offload_layers=int(round(stage.ao * min(stage.ckpt_layers, lyr))),
+        remat_policy=plan.remat_policy,
+        attn_impl=plan.attn_impl,
+        use_pallas=plan.use_pallas,
+        sequence_parallel=plan.sequence_parallel,
+    )
+
+
+@dataclass
+class CompiledStep:
+    fn: Callable                       # jitted
+    state_shardings: Any
+    batch_shardings: Any
+    exec_cfg: ExecConfig
+
+
+def _constrain_device_leaves(tree, shardings):
+    """Pin device-memory leaves to their planned shardings (host leaves are
+    already placed by device_put inside the optimizer)."""
+    def leaf(x, s):
+        if isinstance(s, NamedSharding) and s.memory_kind != "pinned_host":
+            return jax.lax.with_sharding_constraint(x, s)
+        return x
+    return jax.tree.map(leaf, tree, shardings)
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(model: Model, plan: Plan, mesh: Mesh,
+                    adam: OPT.AdamConfig = OPT.AdamConfig(),
+                    donate: bool = True) -> CompiledStep:
+    assert plan.num_stages == 1, "use parallel.pipeline for S>1 plans"
+    cfg = model.cfg
+    stage = plan.stages[0]
+    ma = SH.MeshAxes.for_plan(mesh, stage.tp)
+    ec = stage_exec_config(plan, stage, cfg)
+    rules = SH.make_shard_rules(mesh, ma, plan.sequence_parallel)
+
+    params_sds, axes_table = abstract_params(cfg)
+    state_abs = OPT.init_state(params_sds, axes_table, stage)
+    st_shardings = OPT.state_shardings(state_abs, axes_table, cfg, mesh, ma,
+                                       stage)
+    ep_ok = cfg.num_experts > 0 and (
+        cfg.num_experts % mesh.shape.get(ma.tp, 1) == 0 if ma.tp else False)
+    gspecs = {n: SH.grad_spec(n, s.shape, axes_table[n], mesh, ma,
+                              zero=stage.zero, ep_ok=ep_ok)
+              for n, s in params_sds.items()}
+    g_shardings = {n: NamedSharding(mesh, sp) for n, sp in gspecs.items()}
+
+    G = plan.grad_accum
+
+    def train_step(state, batch):
+        with use_rules(rules):
+            params = state["params"]
+
+            def loss_of(p, mb):
+                return model.loss_fn(p, mb, ec)
+
+            if G == 1:
+                loss, grads = jax.value_and_grad(loss_of)(params, batch)
+                grads = {n: g.astype(jnp.float32) for n, g in grads.items()}
+            else:
+                mbs = jax.tree.map(
+                    lambda x: x.reshape((G, x.shape[0] // G) + x.shape[1:]),
+                    batch)
+                zero_g = {n: jnp.zeros(s.shape, jnp.float32)
+                          for n, s in params_sds.items()}
+                zero_g = jax.lax.with_sharding_constraint(zero_g, g_shardings)
+
+                def micro(acc, mb):
+                    l, g = jax.value_and_grad(loss_of)(params, mb)
+                    acc = {n: acc[n] + g[n].astype(jnp.float32) for n in acc}
+                    acc = jax.lax.with_sharding_constraint(acc, g_shardings)
+                    return acc, l
+
+                grads, losses = jax.lax.scan(micro, zero_g, mbs)
+                grads = {n: g / G for n, g in grads.items()}
+                loss = jnp.mean(losses)
+
+            grads = jax.lax.with_sharding_constraint(grads, g_shardings)
+            if plan.grad_compression:
+                from repro.parallel.compression import fake_compress
+                grads = fake_compress(grads)
+            new_state, om = OPT.adam_update(state, grads, adam, st_shardings)
+            new_state = _constrain_device_leaves(new_state, st_shardings)
+            metrics = {"loss": loss, **om, "step": new_state["step"]}
+            return new_state, metrics
+
+    batch_sh = None  # filled by caller via batch_shardings fn
+    # NOTE: no explicit out_shardings — XLA's SPMD partitioner rejects them
+    # when any output lives in pinned_host.  Host-offloaded slices are moved
+    # back out *outside* the jit boundary (the post-step swap-out; a no-op
+    # when nothing is offloaded).
+    jit_fn = jax.jit(
+        train_step,
+        in_shardings=(st_shardings, None),
+        donate_argnums=(0,) if donate else (),
+    )
+    has_host = any(getattr(s, "memory_kind", None) == "pinned_host"
+                   for s in jax.tree.leaves(st_shardings))
+    if has_host:
+        def fn(state, batch):
+            new_state, metrics = jit_fn(state, batch)
+            return jax.device_put(new_state, st_shardings), metrics
+        fn.lower = jit_fn.lower  # type: ignore[attr-defined]  # dry-run lowers the jitted core
+    else:
+        fn = jit_fn
+    return CompiledStep(fn=fn, state_shardings=st_shardings,
+                        batch_shardings=batch_sh, exec_cfg=ec)
+
+
+def init_sharded_state(model: Model, plan: Plan, mesh: Mesh, rng: jax.Array
+                       ) -> Tuple[Dict[str, Any], Any]:
+    """Materialize a sharded TrainState on the mesh."""
+    cfg = model.cfg
+    stage = plan.stages[0]
+    ma = SH.MeshAxes.for_plan(mesh, stage.tp)
+    params_sds, axes_table = abstract_params(cfg)
+    state_abs = OPT.init_state(params_sds, axes_table, stage)
+    shardings = OPT.state_shardings(state_abs, axes_table, cfg, mesh, ma,
+                                    stage)
+
+    def build():
+        params, _ = model.init(rng)
+        return OPT.init_state(params, axes_table, stage)
+
+    # jit-init with device-memory shardings (XLA SPMD rejects host memory
+    # kinds on freshly-created values), then move host-offloaded slices out.
+    dev_shardings = jax.tree.map(
+        lambda s: NamedSharding(s.mesh, s.spec) if isinstance(
+            s, NamedSharding) else s, shardings,
+        is_leaf=lambda x: isinstance(x, NamedSharding))
+    state = jax.jit(build, out_shardings=dev_shardings)()
+    needs_move = any(
+        getattr(s, "memory_kind", None) == "pinned_host"
+        for s in jax.tree.leaves(shardings))
+    if needs_move:
+        state = jax.device_put(state, shardings)
+    return state, shardings
+
+
+# ---------------------------------------------------------------------------
+# serve steps (prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(model: Model, plan: Plan, mesh: Mesh,
+                      return_cache: bool = False) -> CompiledStep:
+    cfg = model.cfg
+    stage = plan.stages[0]
+    ma = SH.MeshAxes.for_plan(mesh, stage.tp)
+    ec = stage_exec_config(plan, stage, cfg).replace(remat_policy="none",
+                                                     ckpt_layers=0,
+                                                     offload_layers=0)
+    rules = SH.make_shard_rules(mesh, ma, plan.sequence_parallel)
+
+    def prefill(params, batch):
+        with use_rules(rules):
+            return model.prefill_fn(params, batch, ec, return_cache)
+
+    return CompiledStep(fn=jax.jit(prefill), state_shardings=None,
+                        batch_shardings=None, exec_cfg=ec)
+
+
+def make_serve_step(model: Model, plan: Plan, mesh: Mesh,
+                    batch: int, max_len: int, donate: bool = True
+                    ) -> CompiledStep:
+    """One-token decode against caches of length max_len."""
+    cfg = model.cfg
+    stage = plan.stages[0]
+    ma = SH.MeshAxes.for_plan(mesh, stage.tp)
+    ec = stage_exec_config(plan, stage, cfg).replace(remat_policy="none",
+                                                     ckpt_layers=0,
+                                                     offload_layers=0)
+    rules = SH.make_shard_rules(mesh, ma, plan.sequence_parallel)
+
+    cache_dtype = jnp.int8 if plan.kv_cache_dtype == "int8" else jnp.bfloat16
+    caches_sds = jax.eval_shape(
+        lambda: model.init_caches(batch, max_len, cache_dtype))
+    lead = 2 if cfg.family == "hybrid" else 1
+    cache_sh = SH.cache_specs(caches_sds, mesh, ma, batch, lead_dims=1)
+    ec = ec.replace(cache_update=SH.cache_update_mode(cache_sh, ma))
+
+    def serve(params, tokens, caches):
+        with use_rules(rules):
+            logits, new_caches = model.decode_fn(params, tokens, caches, ec)
+            return logits, new_caches
+
+    jit_fn = jax.jit(serve, in_shardings=(None, None, cache_sh),
+                     out_shardings=(None, cache_sh),
+                     donate_argnums=(2,) if donate else ())
+    return CompiledStep(fn=jit_fn, state_shardings=None,
+                        batch_shardings=cache_sh, exec_cfg=ec)

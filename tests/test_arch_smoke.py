@@ -1,0 +1,158 @@
+"""Per-architecture smoke tests on reduced same-family configs (the full
+configs are exercised only by the dry-run): forward loss + one train step
+(finite, shapes), prefill->decode consistency for cached inference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch, list_archs
+from repro.core.plan import single_stage_plan
+from repro.models.common import ExecConfig
+from repro.models.zoo import build_model
+
+ARCHS = list_archs()
+
+
+def _batch(cfg, b=2, s=64, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    if cfg.family == "vlm":
+        st = s - cfg.num_patches
+        return {"patch_embeds": jax.random.normal(
+                    ks[0], (b, cfg.num_patches, cfg.d_model),
+                    jnp.float32).astype(jnp.bfloat16),
+                "tokens": jax.random.randint(ks[1], (b, st), 0,
+                                             cfg.vocab_size),
+                "labels": jax.random.randint(ks[1], (b, st), 0,
+                                             cfg.vocab_size)}
+    if cfg.family == "audio":
+        return {"frames": jax.random.normal(
+                    ks[0], (b, cfg.encoder_seq, cfg.d_model),
+                    jnp.float32).astype(jnp.bfloat16),
+                "tokens": jax.random.randint(ks[1], (b, s), 0,
+                                             cfg.vocab_size),
+                "labels": jax.random.randint(ks[1], (b, s), 0,
+                                             cfg.vocab_size)}
+    return {"tokens": jax.random.randint(ks[1], (b, s), 0, cfg.vocab_size),
+            "labels": jax.random.randint(ks[1], (b, s), 0, cfg.vocab_size)}
+
+
+@pytest.fixture(scope="module", params=ARCHS)
+def arch_setup(request):
+    cfg = get_arch(request.param).reduced()
+    model = build_model(cfg)
+    params, axes = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params, axes
+
+
+def test_forward_loss_finite(arch_setup):
+    cfg, model, params, _ = arch_setup
+    ec = ExecConfig(ckpt_layers=cfg.num_layers // 2)
+    loss = model.loss_fn(params, _batch(cfg), ec)
+    assert np.isfinite(float(loss))
+    assert 1.0 < float(loss) < 20.0     # ~log(V) at init
+
+
+def test_grads_finite_and_nonzero(arch_setup):
+    cfg, model, params, _ = arch_setup
+    ec = ExecConfig(ckpt_layers=cfg.num_layers)
+    g = jax.grad(lambda p: model.loss_fn(p, _batch(cfg), ec))(params)
+    leaves = jax.tree.leaves(g)
+    assert all(np.all(np.isfinite(np.asarray(x, np.float32)))
+               for x in leaves)
+    total = sum(float(jnp.sum(jnp.abs(x.astype(jnp.float32))))
+                for x in leaves)
+    assert total > 0.0
+
+
+def test_remat_does_not_change_loss(arch_setup):
+    cfg, model, params, _ = arch_setup
+    batch = _batch(cfg)
+    l0 = model.loss_fn(params, batch, ExecConfig(ckpt_layers=0,
+                                                 remat_policy="none"))
+    l1 = model.loss_fn(params, batch, ExecConfig(
+        ckpt_layers=cfg.num_layers, remat_policy="full"))
+    assert float(l0) == pytest.approx(float(l1), rel=2e-2, abs=2e-2)
+
+
+def test_one_train_step_reduces_loss(arch_setup):
+    cfg, model, params, axes = arch_setup
+    from repro.training import optimizer as OPT
+    from repro.core.plan import StageConfig
+    stage = StageConfig(layers=cfg.num_layers, micro_batch=2, dp=1, tp=1,
+                        zero=0, ckpt_layers=0)
+    state = OPT.init_state(params, axes, stage)
+    batch = _batch(cfg)
+    ec = ExecConfig(ckpt_layers=0, remat_policy="none")
+
+    @jax.jit
+    def step(state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(p, batch, ec))(state["params"])
+        grads = {n: g.astype(jnp.float32) for n, g in grads.items()}
+        new_state, m = OPT.adam_update(state, grads,
+                                       OPT.AdamConfig(lr=5e-3))
+        return new_state, loss
+
+    l0 = None
+    for _ in range(4):
+        state, loss = step(state, batch)
+        if l0 is None:
+            l0 = float(loss)
+    assert float(loss) < l0
+
+
+def test_decode_matches_prefill(arch_setup):
+    """Teacher-forced decode over cached state must match a fresh full
+    forward at every position (prefill/decode consistency)."""
+    cfg, model, params, _ = arch_setup
+    if cfg.family in ("vlm", "audio"):
+        pytest.skip("frontend-stub families checked in serve smoke")
+    if cfg.is_moe:
+        # capacity dropping makes prefill lossy by design; decode never
+        # drops -> compare with drop-free capacity
+        cfg = cfg.replace(capacity_factor=8.0)
+        from repro.models.zoo import build_model
+        model = build_model(cfg)
+    b, s = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(3), (b, s), 0,
+                              cfg.vocab_size)
+    ec = ExecConfig(ckpt_layers=0, remat_policy="none")
+    logits_p, caches = model.prefill_fn(params, {"tokens": toks[:, :s // 2]},
+                                        ec, True)
+    from repro.models.zoo import pad_caches
+    caches = pad_caches(caches, s - s // 2)   # room for the decoded tokens
+    # decode the second half token by token
+    outs = []
+    for i in range(s // 2, s):
+        lg, caches = model.decode_fn(params, toks[:, i:i + 1], caches, ec)
+        outs.append(lg[:, -1])
+    got = jnp.stack(outs, axis=1)
+    # reference: full prefill up to each position
+    want = []
+    for i in range(s // 2, s):
+        lw, _ = model.prefill_fn(params, {"tokens": toks[:, :i + 1]}, ec,
+                                 True)
+        want.append(lw[:, -1])
+    want = jnp.stack(want, axis=1)
+    # bf16 caches + recompute-vs-cached paths accumulate ~0.2-0.4 absolute
+    # noise on isolated near-zero logits over multiple layers; exact
+    # equivalence is pinned per-mixer in test_kernels and the mixer-level
+    # unit checks, so the model-level check is statistical
+    g = np.asarray(got, np.float32)
+    w = np.asarray(want, np.float32)
+    close = np.isclose(g, w, atol=0.3, rtol=0.3)
+    assert close.mean() > 0.995, f"{(~close).sum()}/{close.size} mismatched"
+    assert np.max(np.abs(g - w)) < 1.0
+
+
+def test_long_500k_only_on_subquadratic():
+    for name in ARCHS:
+        cfg = get_arch(name)
+        if "long_500k" in cfg.shapes:
+            assert cfg.family in ("hybrid", "ssm"), \
+                f"{name} is quadratic but claims long_500k"
+
+
+def test_all_archs_registered():
+    assert len(ARCHS) == 10

@@ -1,0 +1,125 @@
+"""Cost model invariants: memory/runtime monotonicity in each Mist knob."""
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.core.costmodel import StageCostModel, arch_stats, estimate_plan
+from repro.core.plan import single_stage_plan
+from repro.configs.base import ShapeConfig
+
+
+@pytest.fixture(scope="module")
+def scm():
+    return StageCostModel(get_arch("granite-3-8b"), 4096)
+
+
+def _env(scm, **kw):
+    base = dict(b=1.0, dp=4.0, tp=4.0, L=40.0, G=8.0, ckpt=0.0, zero=1,
+                wo=0.0, go=0.0, oo=0.0, ao=0.0, inflight=1.0)
+    base.update(kw)
+    return base
+
+
+def test_ckpt_reduces_memory_increases_time(scm):
+    lo = scm.evaluate(_env(scm, ckpt=0.0))
+    hi = scm.evaluate(_env(scm, ckpt=40.0))
+    assert hi["mem_peak"][()] < lo["mem_peak"][()]
+    assert hi["t_stable"][()] > lo["t_stable"][()]
+
+
+def test_zero_levels_reduce_memory(scm):
+    mems = [float(scm.evaluate(_env(scm, zero=z))["mem_peak"]) for z in
+            (0, 1, 2, 3)]
+    assert mems[1] < mems[0]
+    assert mems[2] < mems[1]
+    assert mems[3] < mems[2]
+
+
+def test_zero23_add_communication(scm):
+    t1 = scm.evaluate(_env(scm, zero=1))
+    t3 = scm.evaluate(_env(scm, zero=3))
+    assert float(t3["items"]["zero3_allgather_fwd"]) > 0.0
+    assert float(t1["items"]["zero3_allgather_fwd"]) == 0.0
+    assert float(t3["items"]["zero2_reduce_scatter"]) > 0.0
+
+
+def test_offload_reduces_memory_adds_dma(scm):
+    off = scm.evaluate(_env(scm, oo=1.0, ao=1.0, ckpt=40.0))
+    on = scm.evaluate(_env(scm, oo=0.0, ao=0.0, ckpt=40.0))
+    assert float(off["mem_peak"]) < float(on["mem_peak"])
+    assert float(off["items"]["opt_swap_in"]) > 0.0
+    assert float(off["items"]["act_offload_out"]) > 0.0
+    # optimizer swap is once-per-step -> lands in d, not t
+    assert float(off["d_delta"]) > float(on["d_delta"])
+
+
+def test_tp_reduces_memory_adds_comm(scm):
+    t1 = scm.evaluate(_env(scm, tp=1.0, dp=16.0))
+    t8 = scm.evaluate(_env(scm, tp=8.0, dp=2.0))
+    assert float(t8["mem_peak"]) < float(t1["mem_peak"])
+    assert float(t8["items"]["tp_fwd"]) > 0.0
+    assert float(t1["items"]["tp_fwd"]) == 0.0
+
+
+def test_bigger_microbatch_longer_step(scm):
+    a = scm.evaluate(_env(scm, b=1.0))
+    b = scm.evaluate(_env(scm, b=4.0))
+    assert float(b["t_stable"]) > float(a["t_stable"])
+    assert float(b["mem_peak"]) > float(a["mem_peak"])
+
+
+def test_batched_matches_scalar(scm):
+    ck = np.array([0.0, 10.0, 20.0, 40.0])
+    env = _env(scm, ckpt=ck)
+    batched = scm.evaluate(env)
+    for i, c in enumerate(ck):
+        single = scm.evaluate(_env(scm, ckpt=float(c)))
+        np.testing.assert_allclose(batched["t_stable"][i],
+                                   single["t_stable"][()], rtol=1e-12)
+        np.testing.assert_allclose(batched["mem_peak"][i],
+                                   single["mem_peak"][()], rtol=1e-12)
+
+
+def test_dp_grad_sync_in_delta_not_stable(scm):
+    """ZeRO-1 grad all-reduce happens once per step -> d_delta only."""
+    r = scm.evaluate(_env(scm, zero=1, dp=8.0, tp=2.0))
+    assert float(r["items"]["dp_grad_sync"]) > 0.0
+    assert float(r["d_delta"]) > 0.0
+
+
+# -- arch stats ---------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "qwen2-72b", "dbrx-132b",
+                                  "zamba2-2.7b", "xlstm-1.3b"])
+def test_arch_stats_consistent_with_param_count(arch):
+    cfg = get_arch(arch)
+    st = arch_stats(cfg)
+    total = st.n_layer * cfg.num_layers + st.n_shared + st.n_embed
+    assert total == pytest.approx(cfg.param_count(), rel=1e-6)
+
+
+def test_moe_active_params_less_than_total():
+    st = arch_stats(get_arch("dbrx-132b"))
+    assert st.n_layer_active < st.n_layer
+    # 16 experts top-4 -> MLP params active fraction ~ 4/16
+    cfg = get_arch("dbrx-132b")
+    expert = 3 * cfg.d_model * cfg.moe_d_ff
+    assert st.n_layer - st.n_layer_active == pytest.approx(
+        (cfg.num_experts - cfg.num_experts_per_tok) * expert)
+
+
+# -- whole-plan estimate --------------------------------------------------------
+
+
+def test_estimate_plan_runs_and_fits_logic():
+    cfg = get_arch("granite-3-8b")
+    shape = ShapeConfig("t", 4096, 32, "train")
+    plan = single_stage_plan(cfg.num_layers, dp=4, tp=4, micro_batch=1,
+                             grad_accum=8, zero=2, ckpt_layers=cfg.num_layers)
+    est = estimate_plan(cfg, shape, plan)
+    assert est["t_step"] > 0
+    assert est["throughput_samples"] == pytest.approx(
+        32 / est["t_step"])
+    # full remat + ZeRO-2 on 16 devices of an 8B model should fit
+    assert est["fits"]

@@ -1,0 +1,220 @@
+"""Per-kernel correctness: shape/dtype sweeps vs the pure-jnp oracles in
+ref.py, including Pallas (interpret=True) and the blocked custom-VJP
+backward vs autodiff of the naive reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+RTOL = {jnp.float32: 2e-5, jnp.bfloat16: 3e-2}
+
+
+def _qkv(bh, sq, sk, d, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (bh, sq, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (bh, sk, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (bh, sk, d), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+# -- flash attention: blocked jnp path ----------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bh,sq,sk,d,block", [
+    (2, 64, 64, 32, 16),
+    (1, 128, 128, 64, 64),
+    (3, 32, 128, 16, 32),     # cross-attn style (sq != sk, non-causal only)
+    (2, 256, 256, 128, 128),
+])
+def test_blocked_fwd_matches_naive(dtype, bh, sq, sk, d, block):
+    q, k, v = _qkv(bh, sq, sk, d, dtype)
+    causal = sq == sk
+    want = ref.naive_attention(q, k, v, causal=causal)
+    got, _ = ops._blocked_fwd(q, k, v, causal, 1.0 / np.sqrt(d), block)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=ATOL[dtype], rtol=RTOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_blocked_bwd_matches_naive_grad(dtype):
+    bh, s, d, block = 2, 64, 32, 16
+    q, k, v = _qkv(bh, s, s, d, dtype)
+
+    def f_ref(q, k, v):
+        return (ref.naive_attention(q, k, v, causal=True)
+                .astype(jnp.float32).sum())
+
+    def f_blk(q, k, v):
+        return ops._flash(q, k, v, True, 1.0 / np.sqrt(d), block,
+                          False).astype(jnp.float32).sum()
+
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    g_blk = jax.grad(f_blk, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_ref, g_blk):
+        np.testing.assert_allclose(np.asarray(b, np.float32),
+                                   np.asarray(a, np.float32),
+                                   atol=5e-2 if dtype == jnp.bfloat16
+                                   else 1e-3, rtol=5e-2)
+
+
+# -- flash attention: Pallas kernel (interpret mode) ---------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bh,s,d,qb,kb", [
+    (2, 128, 64, 64, 64),
+    (1, 256, 128, 128, 64),
+    (2, 64, 32, 32, 32),
+])
+def test_pallas_flash_matches_naive(dtype, bh, s, d, qb, kb):
+    from repro.kernels.flash_attention import flash_attention_fwd
+    q, k, v = _qkv(bh, s, s, d, dtype)
+    want = ref.naive_attention(q, k, v, causal=True)
+    got = flash_attention_fwd(q, k, v, causal=True, q_block=qb, kv_block=kb,
+                              interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=ATOL[dtype], rtol=RTOL[dtype])
+
+
+def test_pallas_flash_noncausal():
+    from repro.kernels.flash_attention import flash_attention_fwd
+    q, k, v = _qkv(2, 128, 128, 64, jnp.float32)
+    want = ref.naive_attention(q, k, v, causal=False)
+    got = flash_attention_fwd(q, k, v, causal=False, q_block=64, kv_block=64,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
+                               rtol=2e-5)
+
+
+# -- GQA wrapper ----------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["naive", "blocked", "pallas"])
+@pytest.mark.parametrize("h,kv", [(8, 8), (8, 2), (4, 1)])
+def test_attention_gqa_wrapper(impl, h, kv):
+    b, s, hd = 2, 64, 32
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), jnp.float32)
+    got = ops.attention(q, k, v, impl=impl, block=32)
+    # reference: expand kv heads then run naive per head
+    g = h // kv
+    kx = jnp.repeat(k, g, axis=2)
+    vx = jnp.repeat(v, g, axis=2)
+    want = jnp.stack([
+        ref.naive_attention(q[:, :, i].reshape(b, s, hd).reshape(b, s, hd),
+                            kx[:, :, i], vx[:, :, i], causal=True)
+        for i in range(h)], axis=2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4,
+                               rtol=1e-4)
+
+
+# -- RMSNorm ---------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4, 128), (2, 64, 256), (1, 8, 512)])
+def test_rmsnorm_pallas_matches_ref(dtype, shape):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape, jnp.float32) \
+        .astype(dtype)
+    scale = jax.random.normal(jax.random.PRNGKey(1), shape[-1:],
+                              jnp.float32).astype(dtype)
+    want = ref.rmsnorm_ref(x, scale)
+    got = ops.rmsnorm(x, scale, impl="pallas")
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=ATOL[dtype], rtol=RTOL[dtype])
+
+
+# -- Mamba2 SSD chunk scan ---------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 64, 2, 16, 8, 16),
+    (2, 128, 4, 32, 16, 32),
+    (1, 256, 2, 64, 32, 64),
+])
+def test_ssd_scan_matches_sequential_ref(b, s, h, p, n, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    xh = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h), jnp.float32))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,), jnp.float32))
+    bb = jax.random.normal(ks[3], (b, s, h, n), jnp.float32)
+    cc = jax.random.normal(ks[4], (b, s, h, n), jnp.float32)
+    want = ref.ssd_ref(xh, dt, a, bb, cc)
+    got, _ = ops.ssd_scan(xh, dt, a, bb, cc, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4,
+                               rtol=2e-4)
+
+
+def test_ssd_scan_bf16():
+    b, s, h, p, n = 1, 64, 2, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    xh = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h), jnp.float32))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,), jnp.float32))
+    bb = jax.random.normal(ks[3], (b, s, h, n), jnp.float32)
+    cc = jax.random.normal(ks[4], (b, s, h, n), jnp.float32)
+    want = ref.ssd_ref(xh, dt, a, bb, cc)
+    got, _ = ops.ssd_scan(xh.astype(jnp.bfloat16), dt, a,
+                          bb.astype(jnp.bfloat16), cc.astype(jnp.bfloat16),
+                          chunk=16)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), atol=0.05, rtol=0.05)
+
+
+# -- int8 KV cache -------------------------------------------------------------
+
+
+def test_int8_kv_decode_close_to_bf16():
+    """Quantized KV decode must track the bf16 decode closely."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import get_arch
+    from repro.models import layers as L
+    from repro.models.common import ExecConfig, ParamBuilder
+
+    cfg = get_arch("granite-3-8b").reduced()
+    pb = ParamBuilder(jax.random.PRNGKey(0), jnp.float32)
+    L.init_attention(pb.scope("a"), cfg)
+    p = {k.split("/", 1)[1]: v for k, v in pb.params.items()}
+    ec = ExecConfig()
+    B, S = 2, 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model),
+                          jnp.float32) * 0.5
+
+    def run(dtype):
+        cache = L.init_self_kv_cache(cfg, B, S, dtype)
+        outs = []
+        for i in range(S):
+            o, cache = L.attention(p, x[:, i:i + 1], cfg, ec, cache=cache)
+            outs.append(o)
+        return jnp.concatenate(outs, axis=1)
+
+    ref_out = run(jnp.bfloat16)
+    q_out = run(jnp.int8)
+    err = float(jnp.max(jnp.abs(q_out.astype(jnp.float32)
+                                - ref_out.astype(jnp.float32))))
+    assert err < 0.1, err
+
+
+def test_quantize_kv_roundtrip():
+    import jax
+    import jax.numpy as jnp
+    from repro.models.layers import dequantize_kv, quantize_kv
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 1, 4, 64),
+                          jnp.float32)
+    q, s = quantize_kv(x)
+    assert q.dtype == jnp.int8
+    back = dequantize_kv(q, s, jnp.float32)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x),
+                               atol=float(np.max(np.abs(np.asarray(x))))
+                               / 127 * 0.51 + 1e-6)

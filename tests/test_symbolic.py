@@ -1,0 +1,115 @@
+"""Symbolic expression engine: correctness + batched-broadcast semantics."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import symbolic as S
+from repro.core.symbolic import Const, Sym, ceil_div, smax, smin, where, wrap
+
+
+def test_basic_arithmetic():
+    x, y = Sym("x"), Sym("y")
+    e = (x + 2) * y - x / y
+    assert e(x=4.0, y=2.0) == pytest.approx((4 + 2) * 2 - 4 / 2)
+
+
+def test_batched_broadcast():
+    x, y = Sym("x"), Sym("y")
+    e = x * y + 1
+    xs = np.arange(5, dtype=float)
+    out = e(x=xs, y=2.0)
+    np.testing.assert_allclose(out, xs * 2 + 1)
+
+
+def test_min_max_where():
+    x = Sym("x")
+    e = where(x > 3, smax(x, 10.0), smin(x, 1.0))
+    assert e(x=5.0) == 10.0
+    assert e(x=2.0) == 1.0
+    np.testing.assert_allclose(e(x=np.array([0.0, 4.0])), [0.0, 10.0])
+
+
+def test_ceil_div():
+    e = ceil_div(Sym("a"), Sym("b"))
+    assert e(a=7.0, b=2.0) == 4.0
+    assert e(a=6.0, b=2.0) == 3.0
+
+
+def test_constant_folding():
+    e = Const(2) * Const(3) + Const(0)
+    assert isinstance(e, Const) and e.v == 6.0
+    x = Sym("x")
+    assert (x * 1) is x
+    assert (x + 0) is x
+    z = x * 0
+    assert isinstance(z, Const) and z.v == 0.0
+
+
+def test_unbound_symbol_raises():
+    with pytest.raises(KeyError):
+        Sym("nope")(x=1.0)
+
+
+def test_memo_shared_subexpression():
+    x = Sym("x")
+    sub = x * x
+    e = sub + sub
+    assert e(x=3.0) == 18.0
+
+
+# -- hypothesis: random expression trees evaluate like direct numpy ----------
+
+_leaf = st.one_of(
+    st.floats(min_value=0.1, max_value=10.0).map(Const),
+    st.sampled_from(["x", "y", "z"]).map(Sym),
+)
+
+
+def _tree(depth):
+    if depth == 0:
+        return _leaf
+    sub = _tree(depth - 1)
+    return st.one_of(
+        _leaf,
+        st.tuples(st.sampled_from("+-*"), sub, sub),
+    )
+
+
+def _build(t):
+    if isinstance(t, S.Expr):
+        return t
+    op, a, b = t
+    a, b = _build(a), _build(b)
+    return {"+": a + b, "-": a - b, "*": a * b}[op]
+
+
+def _direct(t, env):
+    if isinstance(t, Const):
+        return t.v
+    if isinstance(t, Sym):
+        return env[t.name]
+    op, a, b = t
+    a, b = _direct(a, env), _direct(b, env)
+    return {"+": a + b, "-": a - b, "*": a * b}[op]
+
+
+@settings(max_examples=100, deadline=None)
+@given(_tree(4), st.floats(0.1, 5.0), st.floats(0.1, 5.0),
+       st.floats(0.1, 5.0))
+def test_random_trees_match_numpy(t, x, y, z):
+    env = {"x": x, "y": y, "z": z}
+    expr = _build(t)
+    got = expr(**env)
+    want = _direct(t, env)
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+@settings(max_examples=50, deadline=None)
+@given(_tree(4),
+       st.lists(st.floats(0.1, 5.0), min_size=3, max_size=3))
+def test_batched_equals_scalar_loop(t, vals):
+    expr = _build(t)
+    xs = np.asarray(vals)
+    batched = expr(x=xs, y=2.0, z=3.0)
+    looped = np.asarray([expr(x=float(v), y=2.0, z=3.0) for v in vals])
+    np.testing.assert_allclose(batched, looped, rtol=1e-12)

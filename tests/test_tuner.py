@@ -1,0 +1,89 @@
+"""MistTuner end-to-end: search-space inclusion, plan legality, breakdown."""
+import pytest
+
+from repro.configs.base import ShapeConfig, get_arch
+from repro.core.schedule import validate_plan
+from repro.core.tuner import MistTuner, TuneSpec, tune
+
+SHAPE = ShapeConfig("t", 4096, 32, "train")
+
+
+@pytest.fixture(scope="module")
+def reports():
+    cfg = get_arch("granite-3-8b")
+    out = {}
+    for space in ("megatron", "ckpt", "zero", "offload", "mist"):
+        out[space] = tune(cfg, SHAPE, 16, space=space, stage_counts=(1, 2),
+                          grad_accums=(2, 4, 8))
+    return out
+
+
+def test_all_spaces_feasible_on_8b_16dev(reports):
+    for space, rep in reports.items():
+        assert rep.plan is not None, f"{space} infeasible"
+
+
+def test_space_inclusion_monotonicity(reports):
+    """Larger search spaces can only improve the (modeled) objective:
+    megatron ⊂ ckpt ⊂ mist and megatron ⊂ zero ⊂ mist (paper Fig. 13)."""
+    eps = 1e-9
+    assert reports["ckpt"].objective <= reports["megatron"].objective + eps
+    assert reports["zero"].objective <= reports["megatron"].objective + eps
+    assert reports["offload"].objective <= reports["ckpt"].objective + eps
+    assert reports["mist"].objective <= reports["ckpt"].objective + eps
+    assert reports["mist"].objective <= reports["zero"].objective + eps
+    assert reports["mist"].objective <= reports["offload"].objective + eps
+
+
+def test_plans_validate(reports):
+    cfg = get_arch("granite-3-8b")
+    for space, rep in reports.items():
+        errs = validate_plan(rep.plan, cfg, 16, SHAPE.global_batch)
+        assert not errs, f"{space}: {errs}"
+
+
+def test_megatron_space_is_full_ckpt(reports):
+    plan = reports["megatron"].plan
+    for st in plan.stages:
+        assert st.ckpt_layers >= st.layers
+        assert st.zero == 1
+        assert st.oo == st.ao == st.wo == st.go == 0.0
+
+
+def test_tuner_reports_counts(reports):
+    rep = reports["mist"]
+    assert rep.n_points > 1000
+    assert rep.tune_seconds < 300
+    assert rep.best_S in (1, 2)
+
+
+def test_imbalance_awareness_not_worse():
+    cfg = get_arch("granite-3-8b")
+    aware = tune(cfg, SHAPE, 16, space="mist", stage_counts=(2,),
+                 grad_accums=(4,))
+    blind = tune(cfg, SHAPE, 16, space="mist", stage_counts=(2,),
+                 grad_accums=(4,), imbalance_aware=False)
+    assert aware.plan is not None and blind.plan is not None
+    # evaluate BOTH chosen plans under the imbalance-aware objective
+    from repro.core.costmodel import estimate_plan
+    t_aware = estimate_plan(cfg, SHAPE, aware.plan)["t_step"]
+    t_blind = estimate_plan(cfg, SHAPE, blind.plan)["t_step"]
+    assert t_aware <= t_blind * 1.05
+
+
+def test_uniform_heuristic_not_better_than_mist():
+    cfg = get_arch("granite-3-8b")
+    uni = tune(cfg, SHAPE, 16, space="uniform", stage_counts=(2,),
+               grad_accums=(4,))
+    mist = tune(cfg, SHAPE, 16, space="mist", stage_counts=(2,),
+                grad_accums=(4,))
+    if uni.plan is not None and mist.plan is not None:
+        assert mist.objective <= uni.objective + 1e-9
+
+
+def test_infeasible_when_tiny_devices():
+    """72B on 2 chips with 16 GiB cannot fit even with everything on."""
+    cfg = get_arch("qwen2-72b")
+    rep = tune(cfg, ShapeConfig("t", 4096, 8, "train"), 2,
+               space="mist", stage_counts=(1, 2), grad_accums=(1, 2, 4))
+    assert rep.infeasible or rep.plan is None or rep.objective > 0
