@@ -1,10 +1,18 @@
 """Paper Fig. 16: tuning time as optimizations are enabled one by one
-(GPT-22B on 32 chips), plus the symbolic-batched vs per-config-loop
-evaluation speed ratio (the paper's >1e5 x claim vs simulators; here
-measured against a per-point re-evaluation of our own model, isolating the
-batching win)."""
+(GPT-22B on 32 chips), plus two engine-level measurements:
+
+  * batched symbolic substitution vs a per-config evaluation loop (the
+    paper's >1e5x-vs-simulators claim, isolated to the batching win), and
+  * the compiled tuning engine (expression tapes + struct-of-arrays grids +
+    frontier memoization) vs the legacy interpreted engine kept in-tree as
+    the pre-refactor baseline — `tune(..., engine=...)` selects the path
+    and both return identical frontiers/objectives/plans.
+
+Run with --smoke for a CI-sized invocation.
+"""
 from __future__ import annotations
 
+import sys
 import time
 from typing import List
 
@@ -12,7 +20,7 @@ import numpy as np
 
 from benchmarks.common import FAST_TUNE, emit, gpt_config, train_shape
 from repro.core.costmodel import StageCostModel
-from repro.core.schedule import Candidate, enumerate_candidates
+from repro.core.schedule import candidate_grid, enumerate_candidates
 from repro.core.tuner import tune
 
 STEPS = ("megatron", "ckpt", "zero", "offload", "mist")
@@ -33,18 +41,52 @@ def run_tuning_time(size: str = "22b", n_dev: int = 32, gbs: int = 64
     return rows
 
 
+def run_engine_speedup(size: str = "6.7b", n_dev: int = 32, gbs: int = 64,
+                       space: str = "mist", repeats: int = 3) -> List[str]:
+    """Compiled engine vs the legacy pre-refactor path, same machine, same
+    (identical, asserted) results.  A warm-up tune first so one-time module
+    imports (scipy HiGHS, etc.) don't pollute either side; each engine is
+    timed min-of-N to suppress scheduler noise (min vs min is the standard
+    noise-free microbenchmark estimate)."""
+    cfg, shape = gpt_config(size), train_shape(gbs, 2048)
+    tune(cfg, shape, n_dev, space="megatron", **FAST_TUNE)   # warm-up
+
+    def best_of(n, **kw):
+        rep, best = None, float("inf")
+        for _ in range(n):
+            t0 = time.perf_counter()
+            rep = tune(cfg, shape, n_dev, space=space, **FAST_TUNE, **kw)
+            best = min(best, time.perf_counter() - t0)
+        return rep, best
+
+    new, t_new = best_of(repeats)
+    old, t_old = best_of(repeats, engine="legacy")
+    assert new.objective == old.objective and new.plan == old.plan, \
+        "engine equivalence violated"
+    return [
+        emit("tuning_time/engine_compiled", t_new * 1e6,
+             f"seconds={t_new:.2f} points={new.n_points} space={space}"),
+        emit("tuning_time/engine_legacy", t_old * 1e6,
+             f"seconds={t_old:.2f} points={old.n_points} space={space}"),
+        emit("tuning_time/engine_speedup", 0.0,
+             f"{t_old / t_new:.1f}x identical_results=True"),
+    ]
+
+
 def run_batch_speedup(size: str = "6.7b") -> List[str]:
     """Batched symbolic substitution vs per-config evaluation loop."""
     cfg = gpt_config(size)
     scm = StageCostModel(cfg, 2048)
-    cands = list(enumerate_candidates(cfg, n_devices=32, layers=32,
-                                      global_batch=64, grad_accum=8))
-    env = scm.env_from_candidates(cands, layers=32, grad_accum=8)
-    # batched
+    grid = candidate_grid(cfg, n_devices=32, layers=32, global_batch=64,
+                          grad_accum=8)
+    env = grid.env(layers=32, grad_accum=8)
+    # batched (compiled tape over the whole struct-of-arrays grid)
     t0 = time.perf_counter()
     scm.evaluate(env)
     t_batched = time.perf_counter() - t0
     # per-config loop (sample to keep runtime sane, scale up)
+    cands = list(enumerate_candidates(cfg, n_devices=32, layers=32,
+                                      global_batch=64, grad_accum=8))
     sample = cands[:: max(1, len(cands) // 200)][:200]
     t0 = time.perf_counter()
     for c in sample:
@@ -53,8 +95,8 @@ def run_batch_speedup(size: str = "6.7b") -> List[str]:
     t_loop = (time.perf_counter() - t0) / len(sample) * len(cands)
     ratio = t_loop / t_batched
     rows = [
-        emit("tuning_time/batched_eval", t_batched / len(cands) * 1e6,
-             f"n={len(cands)} total_s={t_batched:.4f}"),
+        emit("tuning_time/batched_eval", t_batched / len(grid) * 1e6,
+             f"n={len(grid)} total_s={t_batched:.4f}"),
         emit("tuning_time/per_config_eval", t_loop / len(cands) * 1e6,
              f"extrapolated_total_s={t_loop:.2f}"),
         emit("tuning_time/batching_speedup", 0.0, f"{ratio:.0f}x"),
@@ -62,9 +104,13 @@ def run_batch_speedup(size: str = "6.7b") -> List[str]:
     return rows
 
 
-def run() -> List[str]:
-    return run_tuning_time() + run_batch_speedup()
+def run(smoke: bool = False) -> List[str]:
+    if smoke:
+        return (run_tuning_time(size="1.3b", n_dev=8, gbs=16)
+                + run_engine_speedup(size="1.3b", n_dev=8, gbs=16)
+                + run_batch_speedup(size="1.3b"))
+    return run_tuning_time() + run_engine_speedup() + run_batch_speedup()
 
 
 if __name__ == "__main__":
-    run()
+    run(smoke="--smoke" in sys.argv)

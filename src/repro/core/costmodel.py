@@ -317,6 +317,42 @@ class StageCostModel:
         # extra items referenced by phases but folded elsewhere
         self._first_extra = ("zero1_param_allgather",)
 
+        # ---- compile everything into ONE expression tape --------------------
+        # All outputs (per-item times, both memory peaks, and the per-phase
+        # channel totals consumed by the interference model) evaluate in a
+        # single topologically-sorted pass; hash-consing dedupes the shared
+        # subexpressions across them.
+        outputs: Dict[str, Expr] = dict(self.items)
+        outputs["mem_fwd"] = self.mem_fwd
+        outputs["mem_bwd"] = self.mem_bwd
+        for p in OVERLAP_SCHEDULE:
+            for chan, expr in zip(("C", "G2G", "D2H", "H2D"),
+                                  self._phase_channel_exprs(p)):
+                outputs[f"phase:{p.name}:{chan}"] = expr
+        self.tape = S.compile_tape(outputs)
+        # split tapes: memory feasibility is checked on the full candidate
+        # grid, runtime only on the feasible survivors (tune_stage)
+        self.tape_mem = S.compile_tape({"mem_fwd": self.mem_fwd,
+                                        "mem_bwd": self.mem_bwd})
+        self.tape_time = S.compile_tape(
+            {k: v for k, v in outputs.items()
+             if k not in ("mem_fwd", "mem_bwd")})
+
+    def _phase_channel_exprs(self, phase: PhaseTraffic
+                             ) -> Tuple[Expr, Expr, Expr, Expr]:
+        """Symbolic per-channel totals for one phase (same summation order
+        as the legacy `phase_channels`, so results are bitwise identical)."""
+        def tot(names) -> Expr:
+            out: Expr = wrap(0.0)
+            for n in names:
+                out = out + self.items[n]
+            return out
+        g2g = list(phase.g2g)
+        if phase.name == "first":
+            g2g += list(self._first_extra)
+        return (tot(phase.compute), tot(g2g), tot(phase.d2h),
+                tot(phase.h2d))
+
     # -- evaluation -----------------------------------------------------------
     def _env(self, env: Dict[str, Any]) -> Dict[str, Any]:
         e = dict(env)
@@ -344,17 +380,90 @@ class StageCostModel:
         return (tot(phase.compute), tot(g2g), tot(phase.d2h), tot(phase.h2d))
 
     def evaluate(self, env: Dict[str, Any]) -> Dict[str, np.ndarray]:
-        """env binds each symbol to a scalar or a 1-D candidate array."""
+        """env binds each symbol to a scalar or a 1-D candidate array.
+
+        Runs the compiled tape: one linear pass over the shared expression
+        DAG producing every output, then the batched interference model on
+        the precomputed phase-channel totals."""
+        e = self._env(env)
+        raw = self.tape.run(e)
+        vals = {k: np.asarray(raw[k], np.float64) for k in self.items}
+        mem_fwd = np.asarray(raw["mem_fwd"], np.float64)
+        mem_bwd = np.asarray(raw["mem_bwd"], np.float64)
+        return self._finish(e, vals, mem_fwd, mem_bwd, self._phases(raw))
+
+    def _phases(self, raw: Dict[str, Any]) -> Dict[str, np.ndarray]:
+        """Interference prediction per phase on tape-produced channel
+        totals, deduplicating identical channel rows first (the algorithm
+        is per-row independent, so dedup is result-identical; e.g. the
+        stable phase does not read the oo/wo knobs, collapsing the grid)."""
+        phases = {}
+        for p in OVERLAP_SCHEDULE:
+            x = np.stack(np.broadcast_arrays(
+                *(np.asarray(raw[f"phase:{p.name}:{c}"], np.float64)
+                  for c in ("C", "G2G", "D2H", "H2D"))), -1)
+            if x.ndim == 2 and x.shape[0] > 512:
+                # group exactly-equal rows via a column lexsort (much
+                # cheaper than np.unique's structured-dtype argsort)
+                order = np.lexsort((x[:, 3], x[:, 2], x[:, 1], x[:, 0]))
+                xs = x[order]
+                starts = np.empty(xs.shape[0], bool)
+                starts[0] = True
+                np.any(xs[1:] != xs[:-1], axis=1, out=starts[1:])
+                inv = np.empty(xs.shape[0], np.intp)
+                inv[order] = np.cumsum(starts) - 1
+                phases[p.name] = self.intf.predict_stacked(
+                    xs[starts])[inv]
+            else:
+                phases[p.name] = self.intf.predict_stacked(x)
+        return phases
+
+    def evaluate_memory(self, env: Dict[str, Any]) -> Dict[str, np.ndarray]:
+        """Memory outputs only (the Eq. 4 feasibility inputs), via the
+        dedicated memory tape — used to mask the grid before the more
+        expensive runtime evaluation."""
+        e = self._env(env)
+        raw = self.tape_mem.run(e)
+        mem_fwd = np.asarray(raw["mem_fwd"], np.float64)
+        mem_bwd = np.asarray(raw["mem_bwd"], np.float64)
+        return {"mem_fwd": mem_fwd, "mem_bwd": mem_bwd,
+                "mem_peak": np.maximum(mem_fwd, mem_bwd)}
+
+    def evaluate_times(self, env: Dict[str, Any]) -> Dict[str, np.ndarray]:
+        """Runtime outputs only (per-item times, phase interference,
+        t_stable/d_delta/t_step) via the time tape."""
+        e = self._env(env)
+        raw = self.tape_time.run(e)
+        vals = {k: np.asarray(raw[k], np.float64) for k in self.items}
+        phases = self._phases(raw)
+        t_stable = phases["stable"]
+        d_delta = np.maximum(phases["first"] - t_stable, 0.0) \
+            + np.maximum(phases["last"] - t_stable, 0.0)
+        return {"t_stable": t_stable, "d_delta": d_delta,
+                "t_step": e["G"] * t_stable + d_delta,
+                "t_first": phases["first"], "t_last": phases["last"],
+                "items": vals}
+
+    def evaluate_recursive(self, env: Dict[str, Any]
+                           ) -> Dict[str, np.ndarray]:
+        """Reference path: per-output recursive `Expr.evaluate` walks with a
+        shared id-keyed memo, python-level channel summation, and the
+        per-combination interference formulation.  Kept verbatim as the
+        pre-compilation baseline for equivalence tests and the tuning-time
+        benchmark; must produce bitwise-identical results to `evaluate`."""
         e = self._env(env)
         memo: Dict[int, Any] = {}
         vals = {k: np.asarray(expr.evaluate(e, memo), np.float64)
                 for k, expr in self.items.items()}
         mem_fwd = np.asarray(self.mem_fwd.evaluate(e, memo), np.float64)
         mem_bwd = np.asarray(self.mem_bwd.evaluate(e, memo), np.float64)
-
-        phases = {p.name: pred_intf(*self.phase_channels(p, vals),
-                                    model=self.intf)
+        phases = {p.name: self.intf.predict_reference(
+                      *self.phase_channels(p, vals))
                   for p in OVERLAP_SCHEDULE}
+        return self._finish(e, vals, mem_fwd, mem_bwd, phases)
+
+    def _finish(self, e, vals, mem_fwd, mem_bwd, phases
+                ) -> Dict[str, np.ndarray]:
         t_stable = phases["stable"]
         d_delta = np.maximum(phases["first"] - t_stable, 0.0) \
             + np.maximum(phases["last"] - t_stable, 0.0)

@@ -11,7 +11,6 @@ out), which is what makes Mist's brute-force intra-stage sweep cheap.
 """
 from __future__ import annotations
 
-import itertools
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
@@ -41,6 +40,11 @@ _DEFAULT = {
 }
 
 
+# packed-activity weights: channel i active contributes 1 << i, so a row's
+# co-running pattern is one small int compared against each combo's code
+_CODE_W = np.array([1, 2, 4, 8], np.int64)
+
+
 @dataclass
 class InterferenceModel:
     factors: Dict[Tuple[int, ...], Tuple[float, ...]] = field(
@@ -49,9 +53,70 @@ class InterferenceModel:
     def predict(self, c, g2g, d2h, h2d) -> np.ndarray:
         """Algorithm 1 (PredINTF): total latency of four concurrent streams.
 
-        Inputs broadcastable arrays of per-channel serial times; returns the
-        overlapped wall time per element.
+        Inputs broadcastable arrays of per-channel serial times (e.g. the
+        per-phase channel totals a compiled cost-model tape produces);
+        returns the overlapped wall time per element.
         """
+        x = np.stack(np.broadcast_arrays(
+            np.asarray(c, np.float64), np.asarray(g2g, np.float64),
+            np.asarray(d2h, np.float64), np.asarray(h2d, np.float64)), -1)
+        return self.predict_stacked(x)
+
+    def _tables(self):
+        """Factor lookup tables indexed by packed activity code: per-channel
+        slowdown (1.0 outside the combo), in-combo mask, and a validity bit
+        for codes that have a factor set.  Rebuilt whenever the factor
+        contents change — keyed on the dict's items, so both replacing the
+        dict (calibrate) and mutating entries in place are detected."""
+        src = tuple(self.factors.items())
+        if getattr(self, "_tab_src", None) != src:
+            F = np.ones((16, 4), np.float64)
+            M = np.zeros((16, 4), bool)
+            V = np.zeros(16, bool)
+            for combo, fac in self.factors.items():
+                if len(combo) < 2:      # Alg. 1 resolves levels 4..2 only;
+                    continue            # a lone stream is never scaled
+                code = int(_CODE_W[list(combo)].sum())
+                F[code, list(combo)] = fac
+                M[code, list(combo)] = True
+                V[code] = True
+            self._tab_src, self._tab = src, (F, M, V)
+        return self._tab
+
+    def predict_stacked(self, x: np.ndarray) -> np.ndarray:
+        """Batched Alg. 1 on a pre-stacked (..., 4) channel array.
+
+        Level-synchronous formulation: each pass resolves every row's
+        current co-running combination at once (factor vectors gathered by
+        the row's packed activity code), and resolving always deactivates
+        the shortest stream, so three passes reach 2-way or done.  The
+        per-row arithmetic is exactly the reference per-combo formulation,
+        hence results are bitwise identical.
+        """
+        lead = x.shape[:-1]
+        x = np.ascontiguousarray(x, np.float64).reshape(-1, 4)
+        F, M, V = self._tables()
+        t = np.zeros(x.shape[0], np.float64)
+        for _ in range(3):                      # 4-way -> 3-way -> 2-way
+            code = (x > 1e-12) @ _CODE_W
+            valid = V[code]
+            if not valid.any():
+                break
+            f = F[code]
+            m = M[code]
+            scaled = np.where(m, x * f, np.inf)
+            overlap = np.where(valid, scaled.min(-1), 0.0)
+            rem = np.where(m, (scaled - overlap[:, None]) / f, x)
+            x = np.where(valid[:, None], rem, x)
+            t += overlap
+        return (t + x.sum(-1)).reshape(lead)
+
+    def predict_reference(self, c, g2g, d2h, h2d) -> np.ndarray:
+        """The pre-refactor per-combination mask formulation, kept verbatim
+        as the legacy-engine baseline (benchmarks/tuning_time.py measures
+        the compiled engine against it).  Bitwise identical to `predict`
+        — `tests/test_interference.py` asserts it."""
+        import itertools
         x = np.stack(np.broadcast_arrays(
             np.asarray(c, np.float64), np.asarray(g2g, np.float64),
             np.asarray(d2h, np.float64), np.asarray(h2d, np.float64)), -1)

@@ -18,14 +18,17 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.costmodel import CostParams, StageCostModel
 from repro.core.hardware import V5E, HardwareSpec
-from repro.core.schedule import RATIO_GRID, Candidate, enumerate_candidates
+from repro.core.schedule import (RATIO_GRID, Candidate, CandidateGrid,
+                                 candidate_grid, enumerate_candidates)
+
+ALL_RATIO_DIMS = ("wo", "go", "oo", "ao")
 
 
 @dataclass(frozen=True)
@@ -76,6 +79,36 @@ def pareto_front(pts: Sequence[ParetoPoint], max_points: int = 16
     return front
 
 
+def pareto_front_indices(t: np.ndarray, d: np.ndarray, max_points: int = 16
+                         ) -> np.ndarray:
+    """Vectorized `pareto_front` over columnar (t, d): returns the indices
+    of the surviving frontier, in ascending-t order.  Selects the identical
+    point set (same stable (t, d) sort, same 1e-12 tolerance chain, same
+    decimation), so no per-candidate Python objects are needed upstream.
+    """
+    if t.size == 0:
+        return np.empty(0, np.intp)
+    order = np.lexsort((d, t))           # stable: by t, then d, then index
+    ds = d[order]
+    # strict running-min prefilter is a provable superset of the kept chain
+    # (any point kept by the tolerance rule lies strictly below the min of
+    # everything before it); the exact tolerance scan then runs on the few
+    # survivors only.
+    prev_min = np.concatenate(([np.inf], np.minimum.accumulate(ds)[:-1]))
+    chain = np.nonzero(ds < prev_min)[0]
+    keep: List[int] = []
+    best_d = float("inf")
+    for j in chain.tolist():
+        v = float(ds[j])
+        if v < best_d - 1e-12:
+            keep.append(j)
+            best_d = v
+    if len(keep) > max_points:
+        idx = np.linspace(0, len(keep) - 1, max_points).round().astype(int)
+        keep = [keep[i] for i in sorted(set(idx.tolist()))]
+    return order[np.asarray(keep, np.intp)]
+
+
 def tune_stage(cfg: ArchConfig, *, seq_len: int, layers: int, n_devices: int,
                global_batch_per_stage: int, grad_accum: int,
                has_embed: bool = True, has_head: bool = True,
@@ -89,10 +122,76 @@ def tune_stage(cfg: ArchConfig, *, seq_len: int, layers: int, n_devices: int,
                max_tp: Optional[int] = None,
                max_front: int = 16,
                scm: Optional[StageCostModel] = None,
-               refine: bool = True) -> IntraStageResult:
-    """Batched sweep -> feasible set -> Pareto frontier -> ratio refinement."""
+               refine: bool = True,
+               engine: str = "compiled") -> IntraStageResult:
+    """Batched sweep -> feasible set -> Pareto frontier -> ratio refinement.
+
+    engine="compiled" (default) runs the struct-of-arrays grid through the
+    cost model's compiled expression tape and selects the frontier on the
+    columnar results; Candidate objects exist only for frontier survivors.
+    engine="legacy" is the pre-compilation path (per-object candidate list,
+    recursive expression walks, Python Pareto scan) kept as the equivalence
+    and speedup baseline — both must return identical frontiers.
+    """
     if ckpt_granularity <= 0:
         ckpt_granularity = max(1, layers // 8)
+    if engine == "legacy":
+        return _tune_stage_legacy(
+            cfg, seq_len=seq_len, layers=layers, n_devices=n_devices,
+            global_batch_per_stage=global_batch_per_stage,
+            grad_accum=grad_accum, has_embed=has_embed, has_head=has_head,
+            inflight=inflight, hw=hw, cp=cp, zeros=zeros, ratios=ratios,
+            ratio_dims=ratio_dims, ckpt_granularity=ckpt_granularity,
+            ckpt_values=ckpt_values, max_tp=max_tp, max_front=max_front,
+            scm=scm, refine=refine)
+    if engine != "compiled":
+        raise ValueError(f"unknown engine {engine!r}")
+    grid = candidate_grid(
+        cfg, n_devices=n_devices, layers=layers,
+        global_batch=global_batch_per_stage, grad_accum=grad_accum,
+        zeros=zeros, ratios=ratios, ratio_dims=ratio_dims, max_tp=max_tp,
+        ckpt_granularity=ckpt_granularity, ckpt_values=ckpt_values)
+    res = IntraStageResult(layers=layers, n_devices=n_devices,
+                           grad_accum=grad_accum, frontier=[],
+                           n_evaluated=len(grid))
+    if not len(grid):
+        return res
+    scm = scm or StageCostModel(cfg, seq_len, hw=hw, cp=cp,
+                                has_embed=has_embed, has_head=has_head)
+    # memory feasibility (Eq. 4) on the full grid first; runtime + the
+    # interference model run only on the feasible survivors
+    mem = scm.evaluate_memory(grid.env(layers=layers, grad_accum=grad_accum,
+                                       inflight=inflight))["mem_peak"]
+    budget = scm.memory_budget()
+    ok = mem <= budget
+    res.n_feasible = int(ok.sum())
+    if not ok.any():
+        return res
+    feas = np.nonzero(ok)[0]
+    sub = grid.take(feas)
+    times = scm.evaluate_times(sub.env(layers=layers, grad_accum=grad_accum,
+                                       inflight=inflight))
+    t, d = times["t_stable"], times["d_delta"]
+    sel = pareto_front_indices(t, d, max_points=max_front)
+    front = [ParetoPoint(t=float(t[j]), d=float(d[j]),
+                         mem=float(mem[feas[j]]),
+                         cand=grid.candidate(int(feas[j])))
+             for j in sel]
+    if refine:
+        front = pareto_front(
+            refine_frontier(front, scm, layers=layers,
+                            grad_accum=grad_accum, inflight=inflight,
+                            budget=budget, ratio_dims=ratio_dims),
+            max_points=max_front)
+    res.frontier = front
+    return res
+
+
+def _tune_stage_legacy(cfg: ArchConfig, *, seq_len, layers, n_devices,
+                       global_batch_per_stage, grad_accum, has_embed,
+                       has_head, inflight, hw, cp, zeros, ratios, ratio_dims,
+                       ckpt_granularity, ckpt_values, max_tp, max_front, scm,
+                       refine) -> IntraStageResult:
     cands = list(enumerate_candidates(
         cfg, n_devices=n_devices, layers=layers,
         global_batch=global_batch_per_stage, grad_accum=grad_accum,
@@ -107,7 +206,7 @@ def tune_stage(cfg: ArchConfig, *, seq_len: int, layers: int, n_devices: int,
                                 has_embed=has_embed, has_head=has_head)
     env = scm.env_from_candidates(cands, layers=layers,
                                   grad_accum=grad_accum, inflight=inflight)
-    out = scm.evaluate(env)
+    out = scm.evaluate_recursive(env)
     budget = scm.memory_budget()
     ok = out["mem_peak"] <= budget
     res.n_feasible = int(ok.sum())
@@ -122,7 +221,10 @@ def tune_stage(cfg: ArchConfig, *, seq_len: int, layers: int, n_devices: int,
     if refine:
         front = pareto_front(
             [refine_ratios(p, scm, layers=layers, grad_accum=grad_accum,
-                           inflight=inflight, budget=budget) for p in front],
+                           inflight=inflight, budget=budget,
+                           ratio_dims=ratio_dims,
+                           evaluate=scm.evaluate_recursive)
+             for p in front],
             max_points=max_front)
     res.frontier = front
     return res
@@ -130,14 +232,20 @@ def tune_stage(cfg: ArchConfig, *, seq_len: int, layers: int, n_devices: int,
 
 def refine_ratios(p: ParetoPoint, scm: StageCostModel, *, layers: int,
                   grad_accum: int, inflight: float, budget: float,
-                  iters: int = 2) -> ParetoPoint:
-    """Coordinate descent on (wo, go, oo, ao) around a grid winner — the
-    paper treats offload ratios as continuous floats (Table 2)."""
+                  iters: int = 2,
+                  ratio_dims: Sequence[str] = ALL_RATIO_DIMS,
+                  evaluate: Optional[Callable] = None) -> ParetoPoint:
+    """Coordinate descent on the offload ratios around a grid winner — the
+    paper treats them as continuous floats (Table 2).  Only the dims the
+    active search space actually sweeps (`ratio_dims`) are descended;
+    descending the rest would silently escape the declared space (e.g. the
+    `offload`/`mist` presets sweep only oo/ao)."""
     best = p
     step = (RATIO_GRID[1] - RATIO_GRID[0]) / 2.0
+    evaluate = evaluate or scm.evaluate
     for _ in range(iters):
         cands = []
-        for dim in ("wo", "go", "oo", "ao"):
+        for dim in ratio_dims:
             v = getattr(best.cand, dim)
             for nv in (v - step, v + step):
                 if 0.0 <= nv <= 1.0:
@@ -147,7 +255,7 @@ def refine_ratios(p: ParetoPoint, scm: StageCostModel, *, layers: int,
         env = scm.env_from_candidates(cands, layers=layers,
                                       grad_accum=grad_accum,
                                       inflight=inflight)
-        out = scm.evaluate(env)
+        out = evaluate(env)
         for i, c in enumerate(cands):
             if out["mem_peak"][i] > budget:
                 continue
@@ -157,6 +265,50 @@ def refine_ratios(p: ParetoPoint, scm: StageCostModel, *, layers: int,
             # keep the step-time scalarization improving
             if (grad_accum * q.t + q.d) < (grad_accum * best.t + best.d):
                 best = q
+        step /= 2.0
+    return best
+
+
+def refine_frontier(front: Sequence[ParetoPoint], scm: StageCostModel, *,
+                    layers: int, grad_accum: int, inflight: float,
+                    budget: float, ratio_dims: Sequence[str],
+                    iters: int = 2) -> List[ParetoPoint]:
+    """Batched `refine_ratios` over a whole frontier: per descent iteration
+    all points' neighbor candidates are evaluated in ONE substitution
+    instead of one call per point.  The per-point greedy updates (same
+    neighbor order, same strict-improvement rule) are preserved exactly, so
+    the result matches the sequential refinement point for point."""
+    best = list(front)
+    if not best or not ratio_dims:
+        return best
+    step = (RATIO_GRID[1] - RATIO_GRID[0]) / 2.0
+    for _ in range(iters):
+        cands: List[Candidate] = []
+        owner: List[int] = []
+        for pi, p in enumerate(best):
+            for dim in ratio_dims:
+                v = getattr(p.cand, dim)
+                for nv in (v - step, v + step):
+                    if 0.0 <= nv <= 1.0:
+                        cands.append(
+                            dataclasses.replace(p.cand, **{dim: nv}))
+                        owner.append(pi)
+        if not cands:
+            break
+        env = scm.env_from_candidates(cands, layers=layers,
+                                      grad_accum=grad_accum,
+                                      inflight=inflight)
+        out = scm.evaluate(env)
+        for i, c in enumerate(cands):
+            if out["mem_peak"][i] > budget:
+                continue
+            pi = owner[i]
+            q = ParetoPoint(t=float(out["t_stable"][i]),
+                            d=float(out["d_delta"][i]),
+                            mem=float(out["mem_peak"][i]), cand=c)
+            if (grad_accum * q.t + q.d) < (grad_accum * best[pi].t
+                                           + best[pi].d):
+                best[pi] = q
         step /= 2.0
     return best
 

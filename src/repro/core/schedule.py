@@ -33,6 +33,8 @@ import math
 from dataclasses import dataclass
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.configs.base import ArchConfig
 from repro.core.plan import Plan, StageConfig
 
@@ -121,10 +123,10 @@ def enumerate_candidates(cfg: ArchConfig, *, n_devices: int, layers: int,
                          ckpt_values: Optional[Sequence[int]] = None
                          ) -> Iterator[Candidate]:
     """The intra-stage grid.  `ratio_dims` limits which offload knobs are
-    swept jointly (wo/go default to following oo to keep the grid tractable;
-    `intra_stage.refine_ratios` then descends on all four independently).
-    `ckpt_values` pins the CKPT grid (e.g. (layers,) for the Megatron-style
-    fixed-full-recompute baseline space)."""
+    swept (`intra_stage.refine_ratios` then descends on those same dims
+    around the grid winners; the rest stay pinned at 0 so refinement never
+    leaves the declared space).  `ckpt_values` pins the CKPT grid (e.g.
+    (layers,) for the Megatron-style fixed-full-recompute baseline space)."""
     cks = (list(ckpt_values) if ckpt_values is not None
            else None)
     for dp, tp in legal_dp_tp(n_devices, cfg, max_tp=max_tp):
@@ -137,6 +139,113 @@ def enumerate_candidates(cfg: ArchConfig, *, n_devices: int, layers: int,
                     for wo, go, oo, ao in itertools.product(*ratio_space):
                         yield Candidate(b=b, dp=dp, tp=tp, zero=zero, ckpt=ck,
                                         wo=wo, go=go, oo=oo, ao=ao)
+
+
+# ---------------------------------------------------------------------------
+# Struct-of-arrays candidate grid — the compiled-sweep counterpart of
+# `enumerate_candidates`.  The (b, dp, tp, zero, ckpt, wo, go, oo, ao)
+# cross-product is built directly as flat numpy columns (legality applied as
+# vectorized masks over the divisor grid), in exactly the same order the
+# nested-loop enumeration yields, so downstream Pareto selection breaks ties
+# identically.  `Candidate` views are materialized lazily, only for the few
+# frontier survivors.
+# ---------------------------------------------------------------------------
+
+
+GRID_FIELDS = ("b", "dp", "tp", "zero", "ckpt", "wo", "go", "oo", "ao")
+
+
+@dataclass(frozen=True)
+class CandidateGrid:
+    """Columnar intra-stage candidate set; one float64 array per knob."""
+    b: np.ndarray
+    dp: np.ndarray
+    tp: np.ndarray
+    zero: np.ndarray
+    ckpt: np.ndarray
+    wo: np.ndarray
+    go: np.ndarray
+    oo: np.ndarray
+    ao: np.ndarray
+
+    def __len__(self) -> int:
+        return int(self.b.shape[0])
+
+    def candidate(self, i: int) -> Candidate:
+        """Materialize row `i` as a Candidate (lazy view construction)."""
+        return Candidate(b=int(self.b[i]), dp=int(self.dp[i]),
+                         tp=int(self.tp[i]), zero=int(self.zero[i]),
+                         ckpt=int(self.ckpt[i]),
+                         wo=float(self.wo[i]), go=float(self.go[i]),
+                         oo=float(self.oo[i]), ao=float(self.ao[i]))
+
+    def take(self, idx) -> "CandidateGrid":
+        return CandidateGrid(**{f: getattr(self, f)[idx]
+                                for f in GRID_FIELDS})
+
+    def env(self, *, layers: int, grad_accum: int, inflight: float = 1.0
+            ) -> Dict[str, np.ndarray]:
+        """Cost-model environment binding every symbol to a column —
+        replaces per-object attribute gathering (`env_from_candidates`)."""
+        return {
+            "b": self.b, "dp": self.dp, "tp": self.tp, "zero": self.zero,
+            "ckpt": np.minimum(self.ckpt, float(layers)),
+            "wo": self.wo, "go": self.go, "oo": self.oo, "ao": self.ao,
+            "L": float(layers), "G": float(grad_accum),
+            "inflight": float(inflight),
+        }
+
+
+def legal_dp_tp_mask(n_devices: int, cfg: ArchConfig,
+                     max_tp: Optional[int] = None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorized `legal_dp_tp`: (dp, tp) columns over the divisor grid."""
+    tp = np.asarray(divisors(n_devices), np.int64)
+    ok = np.ones(tp.shape, bool)
+    if max_tp:
+        ok &= tp <= max_tp
+    if cfg.num_heads:
+        ok &= (cfg.num_heads % tp) == 0
+    if cfg.d_ff:
+        ok &= ((cfg.d_ff % tp) == 0) | (((cfg.moe_d_ff or cfg.d_ff) % tp)
+                                        == 0)
+    tp = tp[ok]
+    return n_devices // tp, tp
+
+
+def candidate_grid(cfg: ArchConfig, *, n_devices: int, layers: int,
+                   global_batch: int, grad_accum: int,
+                   zeros: Sequence[int] = (0, 1, 2, 3),
+                   ratios: Sequence[float] = RATIO_GRID,
+                   ratio_dims: Sequence[str] = ("oo", "ao"),
+                   max_tp: Optional[int] = None,
+                   ckpt_granularity: int = 1,
+                   ckpt_values: Optional[Sequence[int]] = None
+                   ) -> CandidateGrid:
+    """Build the same grid as `enumerate_candidates`, as numpy columns."""
+    dps, tps = legal_dp_tp_mask(n_devices, cfg, max_tp=max_tp)
+    # b is unique per (dp, G): G * b * dp == global_batch, when divisible
+    denom = dps * grad_accum
+    feasible = (global_batch % denom) == 0
+    dps, tps = dps[feasible], tps[feasible]
+    bs = global_batch // (dps * grad_accum)
+    cks = np.asarray(list(ckpt_values) if ckpt_values is not None
+                     else ckpt_choices(layers, ckpt_granularity), np.float64)
+    zs = np.asarray(list(zeros), np.float64)
+    ratio_space = [np.asarray(ratios if d in ratio_dims else (0.0,),
+                              np.float64) for d in ("wo", "go", "oo", "ao")]
+    # inner block in nested-loop order: zero (slowest), ckpt, wo, go, oo, ao
+    mesh = np.meshgrid(zs, cks, *ratio_space, indexing="ij")
+    zero_i, ck_i, wo_i, go_i, oo_i, ao_i = (m.ravel() for m in mesh)
+    n_in, n_out = zero_i.size, dps.size
+    return CandidateGrid(
+        b=np.repeat(bs.astype(np.float64), n_in),
+        dp=np.repeat(dps.astype(np.float64), n_in),
+        tp=np.repeat(tps.astype(np.float64), n_in),
+        zero=np.tile(zero_i, n_out), ckpt=np.tile(ck_i, n_out),
+        wo=np.tile(wo_i, n_out), go=np.tile(go_i, n_out),
+        oo=np.tile(oo_i, n_out), ao=np.tile(ao_i, n_out),
+    )
 
 
 # ---------------------------------------------------------------------------

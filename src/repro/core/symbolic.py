@@ -7,15 +7,26 @@ reports >1e5 x speedup over per-config simulation; see
 benchmarks/tuning_time.py for ours).
 
 The engine is a small DAG (Const / Sym / BinOp / UnOp) with operator
-overloading, hash-consing-free but id-memoized evaluation, and numpy
-broadcasting so every symbol may be bound to an array of candidate values.
-``sympy`` is deliberately avoided in the hot path (too slow at ~1e6-point
-batched substitution).
+overloading and numpy broadcasting so every symbol may be bound to an array
+of candidate values.  ``sympy`` is deliberately avoided in the hot path (too
+slow at ~1e6-point batched substitution).
+
+Two evaluation paths exist:
+
+  * ``Expr.evaluate`` — the reference recursive walk with an id-keyed memo
+    (kept for tests and as the legacy baseline in benchmarks).
+  * ``compile_tape`` — compiles a set of output expressions into a ``Tape``:
+    a flat, topologically sorted numpy instruction list that evaluates ALL
+    outputs in a single pass.  Nodes are hash-consed (structurally interned)
+    at construction, so common subexpressions across outputs are shared
+    automatically and each unique node is computed exactly once.  Slots are
+    reused once a value's last consumer has run, keeping the working set of
+    live candidate-batch arrays small.
 """
 from __future__ import annotations
 
 import math
-from typing import Any, Callable, Dict, Union
+from typing import Any, Callable, Dict, List, Mapping, Tuple, Union
 
 import numpy as np
 
@@ -74,11 +85,53 @@ class Expr:
         return self.evaluate(env)
 
 
+# ---------------------------------------------------------------------------
+# Hash-consing: structurally identical nodes are the same object, so shared
+# subexpressions across independently-built expressions dedupe (automatic
+# CSE for the tape compiler) and id-keyed memos hit maximally.  The caches
+# hold strong references, which also keeps id()-based intern keys stable.
+# ---------------------------------------------------------------------------
+
+_CONST_CACHE: Dict[Tuple[float, float], "Const"] = {}
+_SYM_CACHE: Dict[str, "Sym"] = {}
+_OP_CACHE: Dict[Tuple, Expr] = {}
+
+
+def intern_cache_stats() -> Dict[str, int]:
+    return {"const": len(_CONST_CACHE), "sym": len(_SYM_CACHE),
+            "op": len(_OP_CACHE)}
+
+
+def intern_cache_clear() -> None:
+    """Drop the intern tables (they hold strong refs to every node built,
+    so a long-running process sweeping many distinct models grows them
+    monotonically).  Existing Expr objects and compiled Tapes stay fully
+    usable — evaluation never consults the caches — only cross-model CSE
+    restarts from scratch for nodes built afterwards."""
+    _CONST_CACHE.clear()
+    _SYM_CACHE.clear()
+    _OP_CACHE.clear()
+
+
 class Const(Expr):
     __slots__ = ("v",)
 
+    def __new__(cls, v: Number):
+        v = float(v)
+        if v != v:                      # NaN: never interned (NaN != NaN)
+            obj = super().__new__(cls)
+            obj.v = v
+            return obj
+        key = (v, math.copysign(1.0, v))
+        obj = _CONST_CACHE.get(key)
+        if obj is None:
+            obj = super().__new__(cls)
+            obj.v = v
+            _CONST_CACHE[key] = obj
+        return obj
+
     def __init__(self, v: Number):
-        self.v = float(v)
+        pass                            # set in __new__
 
     def evaluate(self, env, memo=None):
         return self.v
@@ -90,8 +143,16 @@ class Const(Expr):
 class Sym(Expr):
     __slots__ = ("name",)
 
+    def __new__(cls, name: str):
+        obj = _SYM_CACHE.get(name)
+        if obj is None:
+            obj = super().__new__(cls)
+            obj.name = name
+            _SYM_CACHE[name] = obj
+        return obj
+
     def __init__(self, name: str):
-        self.name = name
+        pass                            # set in __new__
 
     def evaluate(self, env, memo=None):
         try:
@@ -123,8 +184,17 @@ _UN_FNS: Dict[str, Callable] = {
 class BinOp(Expr):
     __slots__ = ("op", "a", "b")
 
+    def __new__(cls, op: str, a: Expr, b: Expr):
+        key = ("b", op, id(a), id(b), a, b)
+        obj = _OP_CACHE.get(key)
+        if obj is None:
+            obj = super().__new__(cls)
+            obj.op, obj.a, obj.b = op, a, b
+            _OP_CACHE[key] = obj
+        return obj
+
     def __init__(self, op: str, a: Expr, b: Expr):
-        self.op, self.a, self.b = op, a, b
+        pass                            # set in __new__
 
     def evaluate(self, env, memo=None):
         memo = {} if memo is None else memo
@@ -143,8 +213,17 @@ class BinOp(Expr):
 class UnOp(Expr):
     __slots__ = ("op", "a")
 
+    def __new__(cls, op: str, a: Expr):
+        key = ("u", op, id(a), a)
+        obj = _OP_CACHE.get(key)
+        if obj is None:
+            obj = super().__new__(cls)
+            obj.op, obj.a = op, a
+            _OP_CACHE[key] = obj
+        return obj
+
     def __init__(self, op: str, a: Expr):
-        self.op, self.a = op, a
+        pass                            # set in __new__
 
     def evaluate(self, env, memo=None):
         memo = {} if memo is None else memo
@@ -210,3 +289,139 @@ def sum_exprs(xs) -> Expr:
     for x in xs:
         out = out + wrap(x)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Tape compilation: one topological sort of the shared output DAG into a flat
+# instruction list; evaluation is a single linear pass with slot reuse.
+# ---------------------------------------------------------------------------
+
+
+class Tape:
+    """Compiled evaluation plan for a set of named output expressions.
+
+    ``run(env)`` returns {name: value} where each value is whatever numpy
+    broadcasting of the bound symbols yields (scalar or ndarray) — bitwise
+    identical to ``Expr.evaluate`` on the same env, since each unique DAG
+    node executes the same numpy op on the same inputs exactly once.
+    """
+
+    __slots__ = ("instrs", "n_slots", "sym_loads", "const_loads",
+                 "out_slots")
+
+    def __init__(self, instrs, n_slots, sym_loads, const_loads, out_slots):
+        self.instrs = instrs            # [(fn, dst, a, b)]; b < 0 => unary
+        self.n_slots = n_slots
+        self.sym_loads = sym_loads      # [(name, slot)]
+        self.const_loads = const_loads  # [(slot, value)]
+        self.out_slots = out_slots      # {name: slot}
+
+    def __len__(self):
+        return len(self.instrs)
+
+    def run(self, env: Mapping[str, Any]) -> Dict[str, Any]:
+        slots: List[Any] = [None] * self.n_slots
+        for slot, v in self.const_loads:
+            slots[slot] = v
+        for name, slot in self.sym_loads:
+            try:
+                slots[slot] = env[name]
+            except KeyError:
+                raise KeyError(f"unbound symbol {name!r}; "
+                               f"have {sorted(env)}") from None
+        for fn, dst, a, b in self.instrs:
+            slots[dst] = fn(slots[a]) if b < 0 else fn(slots[a], slots[b])
+        return {name: slots[slot] for name, slot in self.out_slots.items()}
+
+
+def _children(node: Expr) -> Tuple[Expr, ...]:
+    if isinstance(node, BinOp):
+        return (node.a, node.b)
+    if isinstance(node, UnOp):
+        return (node.a,)
+    return ()
+
+
+def compile_tape(outputs: Mapping[str, Expr]) -> Tape:
+    """Compile named output expressions into a single shared Tape."""
+    # -- one topological (post-) order over the union DAG, deduped by id ----
+    order: List[Expr] = []
+    visited: set = set()
+    for root in outputs.values():
+        if id(root) in visited:
+            continue
+        stack: List[Tuple[Expr, bool]] = [(root, False)]
+        while stack:
+            node, expanded = stack.pop()
+            if expanded:
+                order.append(node)
+                continue
+            if id(node) in visited:
+                continue
+            visited.add(id(node))
+            stack.append((node, True))
+            for ch in _children(node):
+                if id(ch) not in visited:
+                    stack.append((ch, False))
+
+    # -- consumer counts for slot-liveness ----------------------------------
+    uses: Dict[int, int] = {}
+    for node in order:
+        for ch in _children(node):
+            uses[id(ch)] = uses.get(id(ch), 0) + 1
+    pinned = {id(e) for e in outputs.values()}   # outputs live forever
+
+    slot_of: Dict[int, int] = {}
+    free: List[int] = []
+    n_slots = 0
+
+    def alloc() -> int:
+        nonlocal n_slots
+        if free:
+            return free.pop()
+        n_slots += 1
+        return n_slots - 1
+
+    def release(node: Expr):
+        nid = id(node)
+        uses[nid] -= 1
+        if uses[nid] == 0 and nid not in pinned:
+            free.append(slot_of[nid])
+
+    instrs: List[Tuple[Callable, int, int, int]] = []
+    sym_loads: List[Tuple[str, int]] = []
+    const_loads: List[Tuple[int, Any]] = []
+    # Leaves first: their loads are hoisted to the start of run(), so they
+    # must never be placed into a slot freed mid-stream (an instruction
+    # writing there earlier in the pass would clobber the hoisted load).
+    # Dead leaf slots CAN later be reused as instruction destinations.
+    for node in order:
+        if isinstance(node, Const):
+            s = alloc()
+            const_loads.append((s, node.v))
+            slot_of[id(node)] = s
+        elif isinstance(node, Sym):
+            s = alloc()
+            sym_loads.append((node.name, s))
+            slot_of[id(node)] = s
+    for node in order:
+        nid = id(node)
+        if isinstance(node, (Const, Sym)):
+            continue
+        if isinstance(node, BinOp):
+            a, b = slot_of[id(node.a)], slot_of[id(node.b)]
+            release(node.a)
+            release(node.b)
+            s = alloc()                 # may legally reuse a child's slot:
+            instrs.append((_BIN_FNS[node.op], s, a, b))  # read-before-write
+        elif isinstance(node, UnOp):
+            a = slot_of[id(node.a)]
+            release(node.a)
+            s = alloc()
+            instrs.append((_UN_FNS[node.op], s, a, -1))
+        else:
+            raise TypeError(f"cannot compile node {node!r}")
+        slot_of[nid] = s
+
+    out_slots = {name: slot_of[id(e)] for name, e in outputs.items()}
+    return Tape(instrs, n_slots, sym_loads, const_loads, out_slots)

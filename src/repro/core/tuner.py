@@ -49,6 +49,10 @@ class TuneSpec:
     layer_window: int = 2       # +- around uniform layers-per-stage
     max_front: int = 12
     max_tp: Optional[int] = None
+    # "compiled": expression tape + struct-of-arrays grid + cross-(S, G)
+    # frontier memoization.  "legacy": the pre-compilation interpreted path,
+    # kept as the equivalence/speedup baseline (identical results).
+    engine: str = "compiled"
 
 
 @dataclass
@@ -58,13 +62,15 @@ class TuneReport:
     throughput_samples: float
     throughput_tokens: float
     space: str
-    n_points: int               # candidate configurations evaluated
+    n_points: int               # candidate configurations considered
     n_milp: int
     tune_seconds: float
     best_S: int = 1
     best_G: int = 1
     per_sg: List[Tuple[int, int, float]] = field(default_factory=list)
     infeasible: bool = False
+    n_swept: int = 0            # points actually swept (memo misses only)
+    n_memo_hits: int = 0        # stage hypotheses served from the memo
 
 
 def _space_knobs(space: str, layers: int) -> Dict:
@@ -94,6 +100,12 @@ class MistTuner:
                  cp: CostParams = CostParams()):
         self.spec, self.hw, self.cp = spec, hw, cp
         self._scm_cache: Dict[Tuple[bool, bool], StageCostModel] = {}
+        # cross-(S, G) frontier memo: identical stage hypotheses (same
+        # layers, devices, G, role, inflight, and search-space knobs) are
+        # swept once and reused across the S/G double loop.
+        self._frontier_memo: Dict[Tuple, IntraStageResult] = {}
+        self._memo_hits = 0
+        self._n_swept = 0
 
     # -- stage cost model per role (L / inflight are symbols -> reusable) ---
     def scm(self, has_embed: bool, has_head: bool) -> StageCostModel:
@@ -136,8 +148,16 @@ class MistTuner:
 
     def _frontier(self, *, layers: int, n_dev: int, G: int, role, inflight,
                   knobs) -> IntraStageResult:
+        key = (layers, n_dev, G, role, float(inflight),
+               tuple(knobs["zeros"]), tuple(knobs["ratios"]),
+               tuple(knobs["ratio_dims"]), knobs["ckpt"])
+        if self.spec.engine != "legacy":
+            hit = self._frontier_memo.get(key)
+            if hit is not None:
+                self._memo_hits += 1
+                return hit
         has_embed, has_head = role
-        return tune_stage(
+        res = tune_stage(
             self.spec.arch, seq_len=self.spec.seq_len, layers=layers,
             n_devices=n_dev, global_batch_per_stage=self.spec.global_batch,
             grad_accum=G, has_embed=has_embed, has_head=has_head,
@@ -148,7 +168,12 @@ class MistTuner:
                          "none": (0,)}[knobs["ckpt"]],
             max_tp=self.spec.max_tp, max_front=self.spec.max_front,
             scm=self.scm(has_embed, has_head),
-            refine=bool(knobs["ratio_dims"]))
+            refine=bool(knobs["ratio_dims"]),
+            engine=self.spec.engine)
+        self._n_swept += res.n_evaluated
+        if self.spec.engine != "legacy":
+            self._frontier_memo[key] = res
+        return res
 
     def _cands_for(self, S: int, G: int, knobs) -> List[List[StageCand]]:
         N = self.spec.n_devices
@@ -185,9 +210,13 @@ class MistTuner:
         per_sg = []
         n_milp = 0
         self._n_points = 0
+        self._memo_hits = 0
+        self._n_swept = 0
         for S in self.stage_counts():
             for G in self.grad_accums():
-                if spec.global_batch % (G * 1) or spec.global_batch < G:
+                # divisor-derived G always divides the global batch; only a
+                # user-supplied spec.grad_accums can violate it — skip those
+                if spec.global_batch % G:
                     continue
                 if spec.space == "uniform" and S > 1:
                     sol = self._solve_uniform(S, G, knobs)
@@ -210,7 +239,8 @@ class MistTuner:
                               throughput_samples=0.0, throughput_tokens=0.0,
                               space=spec.space, n_points=self._n_points,
                               n_milp=n_milp, tune_seconds=dt,
-                              infeasible=True)
+                              infeasible=True, n_swept=self._n_swept,
+                              n_memo_hits=self._memo_hits)
         obj, S, G, sol = best
         plan = self._to_plan(sol, G)
         return TuneReport(
@@ -218,7 +248,8 @@ class MistTuner:
             throughput_samples=spec.global_batch / obj,
             throughput_tokens=spec.global_batch * spec.seq_len / obj,
             space=spec.space, n_points=self._n_points, n_milp=n_milp,
-            tune_seconds=dt, best_S=S, best_G=G, per_sg=per_sg)
+            tune_seconds=dt, best_S=S, best_G=G, per_sg=per_sg,
+            n_swept=self._n_swept, n_memo_hits=self._memo_hits)
 
     def _solve_uniform(self, S: int, G: int, knobs
                        ) -> Optional[InterStageSolution]:

@@ -1,7 +1,12 @@
 """Symbolic expression engine: correctness + batched-broadcast semantics."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # property tests skip; example tests still run
+    HAVE_HYPOTHESIS = False
 
 from repro.core import symbolic as S
 from repro.core.symbolic import Const, Sym, ceil_div, smax, smin, where, wrap
@@ -59,21 +64,6 @@ def test_memo_shared_subexpression():
 
 # -- hypothesis: random expression trees evaluate like direct numpy ----------
 
-_leaf = st.one_of(
-    st.floats(min_value=0.1, max_value=10.0).map(Const),
-    st.sampled_from(["x", "y", "z"]).map(Sym),
-)
-
-
-def _tree(depth):
-    if depth == 0:
-        return _leaf
-    sub = _tree(depth - 1)
-    return st.one_of(
-        _leaf,
-        st.tuples(st.sampled_from("+-*"), sub, sub),
-    )
-
 
 def _build(t):
     if isinstance(t, S.Expr):
@@ -93,23 +83,40 @@ def _direct(t, env):
     return {"+": a + b, "-": a - b, "*": a * b}[op]
 
 
-@settings(max_examples=100, deadline=None)
-@given(_tree(4), st.floats(0.1, 5.0), st.floats(0.1, 5.0),
-       st.floats(0.1, 5.0))
-def test_random_trees_match_numpy(t, x, y, z):
-    env = {"x": x, "y": y, "z": z}
-    expr = _build(t)
-    got = expr(**env)
-    want = _direct(t, env)
-    np.testing.assert_allclose(got, want, rtol=1e-12)
+if HAVE_HYPOTHESIS:
+    _leaf = st.one_of(
+        st.floats(min_value=0.1, max_value=10.0).map(Const),
+        st.sampled_from(["x", "y", "z"]).map(Sym),
+    )
 
+    def _tree(depth):
+        if depth == 0:
+            return _leaf
+        sub = _tree(depth - 1)
+        return st.one_of(
+            _leaf,
+            st.tuples(st.sampled_from("+-*"), sub, sub),
+        )
 
-@settings(max_examples=50, deadline=None)
-@given(_tree(4),
-       st.lists(st.floats(0.1, 5.0), min_size=3, max_size=3))
-def test_batched_equals_scalar_loop(t, vals):
-    expr = _build(t)
-    xs = np.asarray(vals)
-    batched = expr(x=xs, y=2.0, z=3.0)
-    looped = np.asarray([expr(x=float(v), y=2.0, z=3.0) for v in vals])
-    np.testing.assert_allclose(batched, looped, rtol=1e-12)
+    @settings(max_examples=100, deadline=None)
+    @given(_tree(4), st.floats(0.1, 5.0), st.floats(0.1, 5.0),
+           st.floats(0.1, 5.0))
+    def test_random_trees_match_numpy(t, x, y, z):
+        env = {"x": x, "y": y, "z": z}
+        expr = _build(t)
+        got = expr(**env)
+        want = _direct(t, env)
+        np.testing.assert_allclose(got, want, rtol=1e-12)
+
+    @settings(max_examples=50, deadline=None)
+    @given(_tree(4),
+           st.lists(st.floats(0.1, 5.0), min_size=3, max_size=3))
+    def test_batched_equals_scalar_loop(t, vals):
+        expr = _build(t)
+        xs = np.asarray(vals)
+        batched = expr(x=xs, y=2.0, z=3.0)
+        looped = np.asarray([expr(x=float(v), y=2.0, z=3.0) for v in vals])
+        np.testing.assert_allclose(batched, looped, rtol=1e-12)
+else:
+    def test_property_tests_need_hypothesis():
+        pytest.importorskip("hypothesis")

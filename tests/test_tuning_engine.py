@@ -1,0 +1,305 @@
+"""Compiled tuning engine: tape/grid/memoization equivalence guarantees.
+
+The refactor contract is *identical results*: tape-compiled evaluation must
+match the recursive reference walk bitwise (atol 0), the struct-of-arrays
+grid must reproduce the nested-loop enumeration exactly (content AND order,
+so Pareto tie-breaking is unchanged), and the compiled tuner must return the
+same frontiers/objective/plan as the legacy engine.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # property tests skip; example tests still run
+    HAVE_HYPOTHESIS = False
+
+from repro.configs.base import ShapeConfig, get_arch
+from repro.core import symbolic as S
+from repro.core.costmodel import StageCostModel
+from repro.core.intra_stage import (ParetoPoint, pareto_front,
+                                    pareto_front_indices, tune_stage)
+from repro.core.schedule import (Candidate, candidate_grid,
+                                 enumerate_candidates)
+from repro.core.symbolic import BinOp, Const, Sym, compile_tape, smax, smin
+from repro.core.tuner import MistTuner, TuneSpec, tune
+
+
+# -- hash-consing --------------------------------------------------------------
+
+
+def test_hash_consing_interns_structurally_equal_nodes():
+    x, y = Sym("x"), Sym("y")
+    assert Sym("x") is x
+    assert Const(2.5) is Const(2.5)
+    assert (x + y) is (Sym("x") + Sym("y"))
+    assert smax(x * y, 3.0) is smax(x * y, 3.0)
+    # distinct structures stay distinct
+    assert (x + y) is not (y + x)
+
+
+def test_hash_consing_preserves_folding():
+    x = Sym("x")
+    assert (x * 1) is x
+    assert (x + 0) is x
+    z = x * 0
+    assert isinstance(z, Const) and z.v == 0.0
+
+
+def test_tape_cse_shared_subdag_evaluated_once():
+    x = Sym("x")
+    sub = (x + 1.0) * (x + 2.0)
+    a, b = sub + 3.0, sub * 4.0
+    tape = compile_tape({"a": a, "b": b})
+    # leaves: x, 1, 2, 3, 4 -> 5 ops total, NOT 8 (sub shared, not re-run)
+    assert len(tape) == 5
+    out = tape.run({"x": 7.0})
+    assert out["a"] == (8.0 * 9.0) + 3.0
+    assert out["b"] == (8.0 * 9.0) * 4.0
+
+
+def test_tape_slot_reuse_bounds_live_buffers():
+    x, y = Sym("x"), Sym("y")
+    chain = x
+    for _ in range(50):
+        chain = (chain + x) * y           # 100 ops over just two leaves
+    tape = compile_tape({"o": chain})
+    assert len(tape) == 100
+    assert tape.n_slots <= 5              # slots recycled along the chain
+    assert tape.run({"x": 1.0, "y": 1.0})["o"] == 51.0
+
+
+# -- tape vs recursive evaluation ---------------------------------------------
+
+
+def test_tape_matches_recursive_on_mixed_dag():
+    x, y = Sym("x"), Sym("y")
+    e1 = smin(x / y, S.ceil(x) * 2.0) + S.where(x > y, x - y, y - x)
+    e2 = (x / y) * (x / y) + e1
+    tape = compile_tape({"e1": e1, "e2": e2})
+    env = {"x": np.linspace(0.1, 9.0, 23), "y": 2.0}
+    got, memo = tape.run(env), {}
+    np.testing.assert_allclose(got["e1"], e1.evaluate(env, memo), atol=0)
+    np.testing.assert_allclose(got["e2"], e2.evaluate(env, memo), atol=0)
+
+
+@pytest.mark.parametrize("arch,role", [
+    ("granite-3-8b", (True, True)),
+    ("granite-3-8b", (False, False)),
+    ("qwen2-72b", (True, False)),
+    ("dbrx-132b", (False, True)),
+    ("zamba2-2.7b", (True, True)),
+])
+def test_stage_cost_model_tape_matches_recursive(arch, role):
+    cfg = get_arch(arch)
+    scm = StageCostModel(cfg, 4096, has_embed=role[0], has_head=role[1])
+    L = min(16, cfg.num_layers)
+    grid = candidate_grid(cfg, n_devices=8, layers=L, global_batch=16,
+                          grad_accum=4)
+    env = grid.env(layers=L, grad_accum=4, inflight=2.0)
+    a = scm.evaluate(env)
+    b = scm.evaluate_recursive(env)
+    for k in ("mem_fwd", "mem_bwd", "mem_peak", "t_stable", "d_delta",
+              "t_step", "t_first", "t_last"):
+        np.testing.assert_allclose(a[k], b[k], atol=0, err_msg=k)
+    for k in a["items"]:
+        np.testing.assert_allclose(a["items"][k], b["items"][k], atol=0,
+                                   err_msg=k)
+
+
+def test_split_tapes_match_full_evaluation():
+    cfg = get_arch("granite-3-8b")
+    scm = StageCostModel(cfg, 4096)
+    grid = candidate_grid(cfg, n_devices=16, layers=40, global_batch=32,
+                          grad_accum=4)
+    env = grid.env(layers=40, grad_accum=4)
+    full = scm.evaluate_recursive(env)
+    mem = scm.evaluate_memory(env)
+    np.testing.assert_allclose(mem["mem_peak"], full["mem_peak"], atol=0)
+    feas = np.nonzero(mem["mem_peak"] <= scm.memory_budget())[0]
+    times = scm.evaluate_times(grid.take(feas).env(layers=40, grad_accum=4))
+    np.testing.assert_allclose(times["t_stable"], full["t_stable"][feas],
+                               atol=0)
+    np.testing.assert_allclose(times["d_delta"], full["d_delta"][feas],
+                               atol=0)
+
+
+if HAVE_HYPOTHESIS:
+    _leaf = st.one_of(
+        st.floats(min_value=0.1, max_value=10.0).map(Const),
+        st.sampled_from(["x", "y", "z"]).map(Sym),
+    )
+
+    def _tree(depth):
+        if depth == 0:
+            return _leaf
+        sub = _tree(depth - 1)
+        return st.one_of(
+            _leaf, st.tuples(st.sampled_from("+-*/^v"), sub, sub))
+
+    def _build(t):
+        if isinstance(t, S.Expr):
+            return t
+        op, a, b = t
+        a, b = _build(a), _build(b)
+        return {"+": a + b, "-": a - b, "*": a * b, "/": a / b,
+                "^": smax(a, b), "v": smin(a, b)}[op]
+
+    @settings(max_examples=100, deadline=None)
+    @given(st.lists(_tree(4), min_size=1, max_size=4),
+           st.lists(st.floats(0.1, 5.0), min_size=3, max_size=3))
+    def test_tape_matches_recursive_on_random_dags(trees, vals):
+        outs = {f"o{i}": _build(t) for i, t in enumerate(trees)}
+        tape = compile_tape(outs)
+        env = {"x": np.asarray(vals), "y": 2.0, "z": 0.7}
+        got, memo = tape.run(env), {}
+        for k, e in outs.items():
+            np.testing.assert_allclose(got[k], e.evaluate(env, memo),
+                                       atol=0, err_msg=k)
+else:
+    def test_property_tests_need_hypothesis():
+        pytest.importorskip("hypothesis")
+
+
+# -- struct-of-arrays grid ----------------------------------------------------
+
+
+@pytest.mark.parametrize("kw", [
+    dict(n_devices=16, layers=40, global_batch=32, grad_accum=8),
+    dict(n_devices=16, layers=40, global_batch=32, grad_accum=8,
+         ckpt_granularity=5),
+    dict(n_devices=8, layers=13, global_batch=24, grad_accum=3,
+         zeros=(1,), ratios=(0.0,), ratio_dims=()),
+    dict(n_devices=8, layers=13, global_batch=24, grad_accum=3,
+         ckpt_values=(13,), max_tp=4),
+    dict(n_devices=8, layers=13, global_batch=24, grad_accum=3,
+         ratio_dims=("wo", "go", "oo", "ao"), ratios=(0.0, 0.5, 1.0)),
+    dict(n_devices=6, layers=10, global_batch=30, grad_accum=5),
+])
+def test_candidate_grid_matches_enumeration(kw):
+    cfg = get_arch("granite-3-8b")
+    grid = candidate_grid(cfg, **kw)
+    legacy = list(enumerate_candidates(cfg, **kw))
+    assert len(grid) == len(legacy)
+    for i in range(len(grid)):
+        assert grid.candidate(i) == legacy[i]
+
+
+def test_grid_env_matches_env_from_candidates():
+    cfg = get_arch("granite-3-8b")
+    kw = dict(n_devices=8, layers=20, global_batch=16, grad_accum=4)
+    grid = candidate_grid(cfg, **kw)
+    cands = list(enumerate_candidates(cfg, **kw))
+    scm = StageCostModel(cfg, 2048)
+    a = grid.env(layers=20, grad_accum=4, inflight=3.0)
+    b = scm.env_from_candidates(cands, layers=20, grad_accum=4, inflight=3.0)
+    for k, v in b.items():
+        np.testing.assert_allclose(a[k], v, atol=0, err_msg=k)
+
+
+# -- vectorized pareto selection ----------------------------------------------
+
+
+def _pp(t, d):
+    return ParetoPoint(t=t, d=d, mem=0.0,
+                       cand=Candidate(b=1, dp=1, tp=1, zero=1, ckpt=0,
+                                      wo=0, go=0, oo=0, ao=0))
+
+
+def test_pareto_front_indices_matches_object_version():
+    rng = np.random.default_rng(0)
+    for trial in range(30):
+        n = int(rng.integers(1, 300))
+        t = rng.uniform(0.1, 3.0, n).round(2)   # rounding forces ties
+        d = rng.uniform(0.0, 3.0, n).round(2)
+        for max_points in (4, 16, 1000):
+            idx = pareto_front_indices(t, d, max_points=max_points)
+            ref = pareto_front([_pp(float(t[i]), float(d[i]))
+                                for i in range(n)], max_points=max_points)
+            assert [(t[i], d[i]) for i in idx] == [(p.t, p.d) for p in ref]
+
+
+# -- tune_stage / tuner engine equivalence ------------------------------------
+
+
+def test_tune_stage_engines_identical_frontier():
+    cfg = get_arch("granite-3-8b")
+    kw = dict(seq_len=4096, layers=40, n_devices=16,
+              global_batch_per_stage=32, grad_accum=8)
+    a = tune_stage(cfg, engine="compiled", **kw)
+    b = tune_stage(cfg, engine="legacy", **kw)
+    assert a.n_evaluated == b.n_evaluated
+    assert a.n_feasible == b.n_feasible
+    assert [(p.t, p.d, p.mem, p.cand) for p in a.frontier] \
+        == [(p.t, p.d, p.mem, p.cand) for p in b.frontier]
+
+
+def test_tuner_engines_identical_objective_and_plan():
+    cfg = get_arch("granite-3-8b")
+    shape = ShapeConfig("t", 4096, 32, "train")
+    new = tune(cfg, shape, 16, space="mist", stage_counts=(1, 2),
+               grad_accums=(4,))
+    old = tune(cfg, shape, 16, space="mist", stage_counts=(1, 2),
+               grad_accums=(4,), engine="legacy")
+    assert new.objective == old.objective
+    assert new.plan == old.plan
+    assert (new.best_S, new.best_G) == (old.best_S, old.best_G)
+    assert new.per_sg == old.per_sg
+
+
+def test_unknown_engine_rejected():
+    cfg = get_arch("granite-3-8b")
+    with pytest.raises(ValueError):
+        tune_stage(cfg, seq_len=2048, layers=8, n_devices=4,
+                   global_batch_per_stage=8, grad_accum=2, engine="nope")
+
+
+# -- frontier memoization -----------------------------------------------------
+
+
+def test_frontier_memo_reuses_identical_hypotheses():
+    cfg = get_arch("granite-3-8b")
+    spec = TuneSpec(arch=cfg, seq_len=4096, global_batch=32, n_devices=16,
+                    space="mist", stage_counts=(1,), grad_accums=(4,))
+    tuner = MistTuner(spec)
+    knobs = {"zeros": (0, 1, 2, 3), "ratios": (0.0, 0.5, 1.0),
+             "ratio_dims": ("oo", "ao"), "ckpt": "tune"}
+    r1 = tuner._frontier(layers=40, n_dev=16, G=4, role=(True, True),
+                         inflight=1.0, knobs=knobs)
+    swept = tuner._n_swept
+    r2 = tuner._frontier(layers=40, n_dev=16, G=4, role=(True, True),
+                         inflight=1.0, knobs=knobs)
+    assert r2 is r1                       # served from the memo
+    assert tuner._memo_hits == 1
+    assert tuner._n_swept == swept        # nothing re-swept
+    # any key component change misses
+    r3 = tuner._frontier(layers=40, n_dev=16, G=4, role=(True, True),
+                         inflight=2.0, knobs=knobs)
+    assert r3 is not r1
+
+
+def test_repeated_tune_on_same_tuner_uses_memo():
+    cfg = get_arch("granite-3-8b")
+    spec = TuneSpec(arch=cfg, seq_len=4096, global_batch=32, n_devices=16,
+                    space="zero", stage_counts=(1, 2), grad_accums=(4,))
+    tuner = MistTuner(spec)
+    first = tuner.tune()
+    second = tuner.tune()
+    assert second.objective == first.objective
+    assert second.plan == first.plan
+    assert second.n_memo_hits > 0
+    assert second.n_swept == 0            # everything served from the memo
+
+
+# -- ratio refinement stays inside the declared space (satellite fix) ---------
+
+
+def test_refinement_restricted_to_swept_ratio_dims():
+    cfg = get_arch("granite-3-8b")
+    res = tune_stage(cfg, seq_len=4096, layers=40, n_devices=16,
+                     global_batch_per_stage=32, grad_accum=8,
+                     ratio_dims=("oo", "ao"), refine=True)
+    for p in res.frontier:
+        assert p.cand.wo == 0.0, "wo escaped the declared search space"
+        assert p.cand.go == 0.0, "go escaped the declared search space"
