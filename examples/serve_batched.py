@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.configs.base import get_arch
 from repro.core.plan import single_stage_plan
 from repro.launch.mesh import make_host_mesh
@@ -32,7 +33,7 @@ def main():
     mesh = make_host_mesh(1, 1)
     plan = single_stage_plan(cfg.num_layers, dp=1, tp=1, micro_batch=1,
                              grad_accum=1, zero=0, ckpt_layers=0)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         params, _ = model.init(jax.random.PRNGKey(0))
         rng = jax.random.PRNGKey(1)
         prompts = jax.random.randint(

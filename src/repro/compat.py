@@ -1,0 +1,101 @@
+"""jax API compatibility layer.
+
+The runtime code targets current jax (``jax.sharding.AxisType``,
+``jax.set_mesh``, top-level ``jax.shard_map`` with ``axis_names`` /
+``check_vma``).  The pinned CI / container environment may carry an older
+jax (0.4.x) where those spellings do not exist yet:
+
+  * ``Mesh`` takes no ``axis_types`` (every axis is implicitly Auto);
+  * ``AbstractMesh`` takes ``((name, size), ...)`` instead of
+    ``(shape, names)``;
+  * the ambient mesh is entered with the ``Mesh`` context manager rather
+    than ``jax.set_mesh``;
+  * ``shard_map`` lives in ``jax.experimental.shard_map`` and spells
+    partial-manual mode as ``auto=`` (the complement of ``axis_names``)
+    and replication checking as ``check_rep``.
+
+Every mesh/shard_map construction in the repo goes through this module so
+both API generations work.  Evaluate capabilities at call time (not import
+time) so test-time monkeypatching and upgrades behave predictably.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+
+
+def axis_type_auto():
+    """``jax.sharding.AxisType.Auto`` where it exists, else None."""
+    at = getattr(jax.sharding, "AxisType", None)
+    return getattr(at, "Auto", None)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """``jax.make_mesh`` with every axis Auto, across the API drift."""
+    auto = axis_type_auto()
+    if auto is not None:
+        return jax.make_mesh(tuple(shape), tuple(axes),
+                             axis_types=(auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def abstract_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """Device-less mesh carrying only (name, size) metadata."""
+    AM = jax.sharding.AbstractMesh
+    try:
+        return AM(tuple(shape), tuple(axes))
+    except TypeError:   # 0.4.x signature: ((name, size), ...)
+        return AM(tuple(zip(axes, shape)))
+
+
+def set_mesh(mesh):
+    """Context manager making ``mesh`` ambient (``jax.set_mesh`` on new
+    jax; the ``Mesh`` object is itself the context manager on old jax)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              axis_names: frozenset, check_vma: bool = True):
+    """Partial-manual shard_map: ``axis_names`` are manual, the rest of the
+    mesh axes stay auto (XLA SPMD keeps handling them)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=axis_names,
+                             check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    # old check_rep uses a different (per-primitive replication-rule)
+    # mechanism that rejects with_sharding_constraint inside the region;
+    # replication of outputs is established explicitly by the callers
+    # (psum over the manual axis), so it is safe to disable.
+    return _sm(f, mesh, in_specs, out_specs, check_rep=False, auto=auto)
+
+
+@functools.lru_cache(maxsize=1)
+def host_memory_kind():
+    """Memory kind for host-offloaded state ("pinned_host"), or None when
+    the backend has no separate host memory space (jax 0.4.x CPU exposes
+    only "unpinned_host", which is also the default device memory there).
+    None means offload ratios degrade gracefully to resident placement —
+    values and update math are unchanged, only the placement differs.
+    Cached: callers probe it per pytree leaf, and a backend's memory
+    spaces don't change within a process."""
+    try:
+        kinds = {m.kind for m in jax.devices()[0].addressable_memories()}
+    except Exception:       # pragma: no cover - exotic backends
+        return None
+    return "pinned_host" if "pinned_host" in kinds else None
+
+
+def supports_pipeline_stage_mapping() -> bool:
+    """Whether this jax can run the pipeline executor's partial-manual
+    shard_map (scan + ppermute over a manual 'stage' axis with auto
+    data/model axes).  On jax 0.4.x the bundled XLA SPMD partitioner hard
+    CHECK-fails on that pattern (hlo_sharding_util IsManualSubgroup), so
+    the pipeline train step is gated to newer jax; single-stage SPMD,
+    tuning, and all analysis paths are unaffected."""
+    return hasattr(jax, "shard_map")

@@ -337,6 +337,24 @@ class StageCostModel:
         self.tape_time = S.compile_tape(
             {k: v for k, v in outputs.items()
              if k not in ("mem_fwd", "mem_bwd")})
+        # reusable intermediate buffers for the hot tapes (sweep loops)
+        self._scratch = {id(t): t.make_scratch()
+                         for t in (self.tape, self.tape_mem, self.tape_time)}
+        # G-independence is structural: the time tape never loads G or
+        # inflight, the memory tape never loads G, so callers can cache
+        # results under cheap structural keys that omit them (collapses
+        # the tuner's G loop, ROADMAP item).  The loaded-sym sets are
+        # recorded so evaluate_times can REFUSE a structural key if a
+        # model change ever makes the time tape read inflight (the one
+        # symbol the callers' keys don't determine) — the cache then
+        # degrades to disabled instead of serving wrong results.
+        self._time_syms = tuple(sorted({n for n, _ in
+                                        self.tape_time.sym_loads}))
+        self._mem_syms = tuple(sorted({n for n, _ in
+                                       self.tape_mem.sym_loads}))
+        self._tape_cache: Dict[Tuple, Dict[str, Any]] = {}
+        self.cache_hits = 0
+        self.cache_misses = 0
 
     def _phase_channel_exprs(self, phase: PhaseTraffic
                              ) -> Tuple[Expr, Expr, Expr, Expr]:
@@ -379,6 +397,21 @@ class StageCostModel:
             g2g += list(self._first_extra)
         return (tot(phase.compute), tot(g2g), tot(phase.d2h), tot(phase.h2d))
 
+    _TAPE_CACHE_MAX = 128
+
+    def _cache_get(self, key):
+        hit = self._tape_cache.get(key)
+        if hit is not None:
+            self.cache_hits += 1
+        else:
+            self.cache_misses += 1
+        return hit
+
+    def _cache_put(self, key, value):
+        if len(self._tape_cache) >= self._TAPE_CACHE_MAX:
+            self._tape_cache.pop(next(iter(self._tape_cache)))
+        self._tape_cache[key] = value
+
     def evaluate(self, env: Dict[str, Any]) -> Dict[str, np.ndarray]:
         """env binds each symbol to a scalar or a 1-D candidate array.
 
@@ -386,7 +419,7 @@ class StageCostModel:
         DAG producing every output, then the batched interference model on
         the precomputed phase-channel totals."""
         e = self._env(env)
-        raw = self.tape.run(e)
+        raw = self.tape.run(e, self._scratch[id(self.tape)])
         vals = {k: np.asarray(raw[k], np.float64) for k in self.items}
         mem_fwd = np.asarray(raw["mem_fwd"], np.float64)
         mem_bwd = np.asarray(raw["mem_bwd"], np.float64)
@@ -418,31 +451,69 @@ class StageCostModel:
                 phases[p.name] = self.intf.predict_stacked(x)
         return phases
 
-    def evaluate_memory(self, env: Dict[str, Any]) -> Dict[str, np.ndarray]:
+    def evaluate_memory(self, env: Dict[str, Any],
+                        cache_key: Optional[Tuple] = None
+                        ) -> Dict[str, np.ndarray]:
         """Memory outputs only (the Eq. 4 feasibility inputs), via the
         dedicated memory tape — used to mask the grid before the more
-        expensive runtime evaluation."""
+        expensive runtime evaluation.
+
+        ``cache_key`` enables the knob-tuple result cache under a
+        caller-supplied structural key; the caller guarantees the key
+        determines the env columns exactly (see tune_stage_multi_g).
+        Cached results are shared objects — treat them as read-only."""
         e = self._env(env)
-        raw = self.tape_mem.run(e)
+        key = None
+        if cache_key is not None:
+            key = ("memk",) + tuple(cache_key)
+            hit = self._cache_get(key)
+            if hit is not None:
+                return hit
+        raw = self.tape_mem.run(e, self._scratch[id(self.tape_mem)])
         mem_fwd = np.asarray(raw["mem_fwd"], np.float64)
         mem_bwd = np.asarray(raw["mem_bwd"], np.float64)
-        return {"mem_fwd": mem_fwd, "mem_bwd": mem_bwd,
-                "mem_peak": np.maximum(mem_fwd, mem_bwd)}
+        out = {"mem_fwd": mem_fwd, "mem_bwd": mem_bwd,
+               "mem_peak": np.maximum(mem_fwd, mem_bwd)}
+        if key is not None:
+            self._cache_put(key, out)
+        return out
 
-    def evaluate_times(self, env: Dict[str, Any]) -> Dict[str, np.ndarray]:
+    def evaluate_times(self, env: Dict[str, Any],
+                       cache_key: Optional[Tuple] = None
+                       ) -> Dict[str, np.ndarray]:
         """Runtime outputs only (per-item times, phase interference,
-        t_stable/d_delta/t_step) via the time tape."""
+        t_stable/d_delta/t_step) via the time tape.
+
+        ``cache_key`` enables the knob-tuple result cache under a
+        caller-supplied structural key.  The time tape loads neither G
+        nor inflight, so identical knob columns hit across the tuner's G
+        loop and across same-role stage hypotheses that differ only in
+        inflight depth; ``t_step`` (the only G-dependent output) is
+        recomputed from the current env.  Callers' keys carry G but by
+        design NOT inflight — if a model change ever makes the time tape
+        read inflight, caching is refused here rather than serving
+        results computed under a different inflight.  Cached results are
+        shared objects — treat them as read-only."""
         e = self._env(env)
-        raw = self.tape_time.run(e)
+        key = None
+        if cache_key is not None and "inflight" not in self._time_syms:
+            key = ("timek",) + tuple(cache_key)
+            hit = self._cache_get(key)
+            if hit is not None:
+                return dict(hit, t_step=e["G"] * hit["t_stable"]
+                            + hit["d_delta"])
+        raw = self.tape_time.run(e, self._scratch[id(self.tape_time)])
         vals = {k: np.asarray(raw[k], np.float64) for k in self.items}
         phases = self._phases(raw)
         t_stable = phases["stable"]
         d_delta = np.maximum(phases["first"] - t_stable, 0.0) \
             + np.maximum(phases["last"] - t_stable, 0.0)
-        return {"t_stable": t_stable, "d_delta": d_delta,
-                "t_step": e["G"] * t_stable + d_delta,
-                "t_first": phases["first"], "t_last": phases["last"],
-                "items": vals}
+        out = {"t_stable": t_stable, "d_delta": d_delta,
+               "t_first": phases["first"], "t_last": phases["last"],
+               "items": vals}
+        if key is not None:
+            self._cache_put(key, out)
+        return dict(out, t_step=e["G"] * t_stable + d_delta)
 
     def evaluate_recursive(self, env: Dict[str, Any]
                            ) -> Dict[str, np.ndarray]:

@@ -17,6 +17,7 @@ ratios around each frontier point (the paper treats them as continuous).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -187,6 +188,137 @@ def tune_stage(cfg: ArchConfig, *, seq_len: int, layers: int, n_devices: int,
     return res
 
 
+def tune_stage_multi_g(cfg: ArchConfig, *, seq_len: int, layers: int,
+                       n_devices: int, global_batch_per_stage: int,
+                       grad_accums: Sequence[int],
+                       has_embed: bool = True, has_head: bool = True,
+                       inflight: float = 1.0,
+                       hw: HardwareSpec = V5E, cp: CostParams = CostParams(),
+                       zeros: Sequence[int] = (0, 1, 2, 3),
+                       ratios: Sequence[float] = RATIO_GRID,
+                       ratio_dims: Sequence[str] = ("oo", "ao"),
+                       ckpt_granularity: int = 0,
+                       ckpt_values: Optional[Sequence[int]] = None,
+                       max_tp: Optional[int] = None,
+                       max_front: int = 16,
+                       scm: Optional[StageCostModel] = None,
+                       refine: bool = True,
+                       cached: bool = True
+                       ) -> Dict[int, "IntraStageResult"]:
+    """G-collapsed `tune_stage`: sweep one stage hypothesis for ALL grad
+    accumulation choices in a single pass (ROADMAP "collapse the G loop").
+
+    The cost-model time tape is structurally G-independent (it never loads
+    the G symbol — only b = batch/(dp*G) differs between the per-G grids),
+    and the memory tape likewise, so the per-G grids are concatenated and
+    evaluated in ONE substitution: one memory pass over the union, one
+    runtime+interference pass over the feasible union rows, then per-G
+    Pareto selection and one *batched-across-G* ratio refinement per
+    descent iteration.  Every per-row computation is elementwise, so each
+    G's slice is bitwise identical to what a standalone `tune_stage` call
+    returns — asserted in tests/test_sweep.py.
+
+    ``cached=True`` additionally consults the cost model's knob-tuple
+    result cache, which collapses repeated identical sub-sweeps (e.g. the
+    same-role middle stages of a deep pipeline differ only in ``inflight``,
+    which the time tape never reads).
+    """
+    if ckpt_granularity <= 0:
+        ckpt_granularity = max(1, layers // 8)
+    scm = scm or StageCostModel(cfg, seq_len, hw=hw, cp=cp,
+                                has_embed=has_embed, has_head=has_head)
+    grids = {}
+    results: Dict[int, IntraStageResult] = {}
+    for G in grad_accums:
+        grid = candidate_grid(
+            cfg, n_devices=n_devices, layers=layers,
+            global_batch=global_batch_per_stage, grad_accum=G,
+            zeros=zeros, ratios=ratios, ratio_dims=ratio_dims, max_tp=max_tp,
+            ckpt_granularity=ckpt_granularity, ckpt_values=ckpt_values)
+        grids[G] = grid
+        results[G] = IntraStageResult(layers=layers, n_devices=n_devices,
+                                      grad_accum=G, frontier=[],
+                                      n_evaluated=len(grid))
+    live = [G for G in grad_accums if len(grids[G])]
+    if not live:
+        return results
+    # structural cache-key prefix: these arguments determine every grid
+    # column exactly (plus the feasible mask for the time envs below), so
+    # no content hashing is needed for the knob-tuple cache
+    skey = (cfg.name, layers, n_devices, global_batch_per_stage,
+            tuple(zeros), tuple(ratios), tuple(ratio_dims),
+            tuple(ckpt_values) if ckpt_values is not None else
+            ("gran", ckpt_granularity), max_tp)
+
+    # ---- one memory pass over the union grid ------------------------------
+    envs = {G: grids[G].env(layers=layers, grad_accum=G, inflight=inflight)
+            for G in live}
+    union = {}
+    for k in envs[live[0]]:
+        vals = [envs[G][k] for G in live]
+        if all(np.ndim(v) == 0 for v in vals) and \
+                len({float(v) for v in vals}) == 1:
+            union[k] = vals[0]
+        else:
+            union[k] = np.concatenate(
+                [np.broadcast_to(np.asarray(v, np.float64),
+                                 (len(grids[G]),)) for v, G in
+                 zip(vals, live)])
+    offs = np.cumsum([0] + [len(grids[G]) for G in live])
+    mem = scm.evaluate_memory(
+        union, cache_key=(skey + (tuple(live), float(inflight))
+                          if cached else None))["mem_peak"]
+    budget = scm.memory_budget()
+    ok = mem <= budget
+
+    # ---- runtime on the feasible rows, per G (time tape results hit the
+    # knob-tuple cache across same-role hypotheses differing only in
+    # inflight — the time tape never reads it) ------------------------------
+    feas_per_g = {}
+    for j, G in enumerate(live):
+        sl = slice(offs[j], offs[j + 1])
+        ok_g = ok[sl]
+        results[G].n_feasible = int(ok_g.sum())
+        feas_per_g[G] = np.nonzero(ok_g)[0]
+    live_t = [G for G in live if feas_per_g[G].size]
+    if not live_t:
+        return results
+
+    # ---- per-G Pareto selection ------------------------------------------
+    fronts: Dict[int, List[ParetoPoint]] = {}
+    for G in live_t:
+        feas = feas_per_g[G]
+        base = offs[live.index(G)]
+        sub = grids[G].take(feas)
+        tkey = None
+        if cached:
+            fd = hashlib.blake2b(np.ascontiguousarray(feas).tobytes(),
+                                 digest_size=16).digest()
+            # the time tape reads neither G nor inflight: the key carries G
+            # only through the b column's G-dependence (b = batch/(dp*G))
+            tkey = skey + (G, fd)
+        times = scm.evaluate_times(
+            sub.env(layers=layers, grad_accum=G, inflight=inflight),
+            cache_key=tkey)
+        t, d = times["t_stable"], times["d_delta"]
+        sel = pareto_front_indices(t, d, max_points=max_front)
+        fronts[G] = [ParetoPoint(t=float(t[i]), d=float(d[i]),
+                                 mem=float(mem[base + feas[i]]),
+                                 cand=grids[G].candidate(int(feas[i])))
+                     for i in sel]
+
+    # ---- one batched-across-G refinement ----------------------------------
+    if refine and ratio_dims:
+        fronts = refine_frontier_grouped(
+            fronts, scm, layers=layers, inflight=inflight, budget=budget,
+            ratio_dims=ratio_dims)
+        for G in fronts:
+            fronts[G] = pareto_front(fronts[G], max_points=max_front)
+    for G, front in fronts.items():
+        results[G].frontier = front
+    return results
+
+
 def _tune_stage_legacy(cfg: ArchConfig, *, seq_len, layers, n_devices,
                        global_batch_per_stage, grad_accum, has_embed,
                        has_head, inflight, hw, cp, zeros, ratios, ratio_dims,
@@ -311,6 +443,79 @@ def refine_frontier(front: Sequence[ParetoPoint], scm: StageCostModel, *,
                 best[pi] = q
         step /= 2.0
     return best
+
+
+def refine_fronts_batched(fronts: Dict, meta: Dict, scm: StageCostModel, *,
+                          budget: float, ratio_dims: Sequence[str],
+                          iters: int = 2) -> Dict:
+    """`refine_frontier` batched across MANY stage hypotheses at once.
+
+    ``fronts`` maps an arbitrary hashable key -> frontier points;
+    ``meta`` maps the same keys -> (layers, inflight, G).  All hypotheses
+    must share one cost model (same arch/seq/role) — L and inflight are
+    bound as per-row columns, which the tapes broadcast exactly like the
+    scalar binding, so every row's result is bitwise identical to the
+    per-hypothesis `refine_frontier` call.  One tape + interference pass
+    per descent iteration replaces one per (hypothesis, G).
+    """
+    best = {k: list(ps) for k, ps in fronts.items()}
+    keys = [k for k in best if best[k]]
+    if not keys or not ratio_dims:
+        return best
+    step = (RATIO_GRID[1] - RATIO_GRID[0]) / 2.0
+    for _ in range(iters):
+        cands: List[Candidate] = []
+        owner: List[Tuple] = []
+        lcol: List[float] = []
+        icol: List[float] = []
+        for k in keys:
+            layers, inflight, _G = meta[k]
+            for pi, p in enumerate(best[k]):
+                for dim in ratio_dims:
+                    v = getattr(p.cand, dim)
+                    for nv in (v - step, v + step):
+                        if 0.0 <= nv <= 1.0:
+                            cands.append(
+                                dataclasses.replace(p.cand, **{dim: nv}))
+                            owner.append((k, pi))
+                            lcol.append(float(layers))
+                            icol.append(float(inflight))
+        if not cands:
+            break
+        env = scm.env_from_candidates(cands, layers=0, grad_accum=0)
+        L = np.asarray(lcol, np.float64)
+        env["L"] = L
+        env["inflight"] = np.asarray(icol, np.float64)
+        env["ckpt"] = np.minimum(
+            np.asarray([c.ckpt for c in cands], np.float64), L)
+        out = scm.evaluate(env)
+        for i, c in enumerate(cands):
+            if out["mem_peak"][i] > budget:
+                continue
+            k, pi = owner[i]
+            G = meta[k][2]
+            q = ParetoPoint(t=float(out["t_stable"][i]),
+                            d=float(out["d_delta"][i]),
+                            mem=float(out["mem_peak"][i]), cand=c)
+            if (G * q.t + q.d) < (G * best[k][pi].t + best[k][pi].d):
+                best[k][pi] = q
+        step /= 2.0
+    return best
+
+
+def refine_frontier_grouped(fronts: Dict[int, List[ParetoPoint]],
+                            scm: StageCostModel, *, layers: int,
+                            inflight: float, budget: float,
+                            ratio_dims: Sequence[str],
+                            iters: int = 2) -> Dict[int, List[ParetoPoint]]:
+    """`refine_frontier` batched across the G axis of one hypothesis —
+    the (layers, inflight)-constant specialization of
+    `refine_fronts_batched` (per-row L/inflight binding is bitwise
+    identical to the scalar binding, so delegating keeps each G's refined
+    frontier identical to a standalone `refine_frontier` call)."""
+    meta = {G: (layers, inflight, G) for G in fronts}
+    return refine_fronts_batched(fronts, meta, scm, budget=budget,
+                                 ratio_dims=ratio_dims, iters=iters)
 
 
 def alpha_winners(result: IntraStageResult, n_alpha: int = 8

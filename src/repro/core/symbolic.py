@@ -297,6 +297,23 @@ def sum_exprs(xs) -> Expr:
 # ---------------------------------------------------------------------------
 
 
+class TapeScratch:
+    """Reusable per-instruction output buffers for ``Tape.run``.
+
+    The first run records each non-output instruction's result array as
+    that instruction's buffer; later runs write into it via the ufunc
+    ``out=`` argument, eliminating one allocation per instruction in the
+    steady state of a big sweep.  When the batch shape changes, the ufunc
+    rejects the stale buffer and a fresh result array is adopted instead
+    (self-resizing).  Only safe because intermediate values never escape
+    ``run`` — output slots always get fresh arrays."""
+
+    __slots__ = ("bufs",)
+
+    def __init__(self, tape: "Tape"):
+        self.bufs: List[Any] = [None] * len(tape.instrs)
+
+
 class Tape:
     """Compiled evaluation plan for a set of named output expressions.
 
@@ -304,10 +321,14 @@ class Tape:
     broadcasting of the bound symbols yields (scalar or ndarray) — bitwise
     identical to ``Expr.evaluate`` on the same env, since each unique DAG
     node executes the same numpy op on the same inputs exactly once.
+    ``run(env, scratch=tape.make_scratch())`` additionally reuses
+    intermediate buffers across runs (ufunc ``out=``), which cuts
+    allocation traffic in tight sweep loops; results stay bitwise
+    identical (same ufunc, same operands, preallocated destination).
     """
 
     __slots__ = ("instrs", "n_slots", "sym_loads", "const_loads",
-                 "out_slots")
+                 "out_slots", "_reusable")
 
     def __init__(self, instrs, n_slots, sym_loads, const_loads, out_slots):
         self.instrs = instrs            # [(fn, dst, a, b)]; b < 0 => unary
@@ -315,11 +336,28 @@ class Tape:
         self.sym_loads = sym_loads      # [(name, slot)]
         self.const_loads = const_loads  # [(slot, value)]
         self.out_slots = out_slots      # {name: slot}
+        # instructions whose result may be buffer-reused: real ufuncs (the
+        # comparison lambdas aren't) writing a non-output slot at this
+        # program point (output values escape run() and must stay fresh).
+        out_writers = set()
+        final_writer: Dict[int, int] = {}
+        for i, (_, dst, _, _) in enumerate(instrs):
+            final_writer[dst] = i
+        for s in out_slots.values():
+            if s in final_writer:
+                out_writers.add(final_writer[s])
+        self._reusable = [
+            isinstance(fn, np.ufunc) and i not in out_writers
+            for i, (fn, _, _, _) in enumerate(instrs)]
 
     def __len__(self):
         return len(self.instrs)
 
-    def run(self, env: Mapping[str, Any]) -> Dict[str, Any]:
+    def make_scratch(self) -> TapeScratch:
+        return TapeScratch(self)
+
+    def run(self, env: Mapping[str, Any],
+            scratch: "TapeScratch" = None) -> Dict[str, Any]:
         slots: List[Any] = [None] * self.n_slots
         for slot, v in self.const_loads:
             slots[slot] = v
@@ -329,8 +367,44 @@ class Tape:
             except KeyError:
                 raise KeyError(f"unbound symbol {name!r}; "
                                f"have {sorted(env)}") from None
-        for fn, dst, a, b in self.instrs:
-            slots[dst] = fn(slots[a]) if b < 0 else fn(slots[a], slots[b])
+        if scratch is None:
+            for fn, dst, a, b in self.instrs:
+                slots[dst] = fn(slots[a]) if b < 0 else fn(slots[a], slots[b])
+        else:
+            bufs = scratch.bufs
+            reusable = self._reusable
+            nd = np.ndarray
+            for i, (fn, dst, a, b) in enumerate(self.instrs):
+                va = slots[a]
+                buf = bufs[i]
+                if b < 0:
+                    # ``out=`` only when the result provably fills the
+                    # buffer exactly — a scalar operand would silently
+                    # broadcast into a stale larger buffer otherwise.
+                    if buf is not None and type(va) is nd \
+                            and va.shape == buf.shape:
+                        r = fn(va, out=buf)
+                    else:
+                        if buf is not None:
+                            bufs[i] = None      # batch shape changed
+                        r = fn(va)
+                else:
+                    vb = slots[b]
+                    if buf is not None:
+                        sa = va.shape if type(va) is nd else ()
+                        sb = vb.shape if type(vb) is nd else ()
+                        if (sa == buf.shape and sb in ((), buf.shape)) \
+                                or (sb == buf.shape and sa == ()):
+                            r = fn(va, vb, out=buf)
+                        else:
+                            bufs[i] = None
+                            r = fn(va, vb)
+                    else:
+                        r = fn(va, vb)
+                if bufs[i] is None and reusable[i] \
+                        and type(r) is nd and r.ndim:
+                    bufs[i] = r
+                slots[dst] = r
         return {name: slots[slot] for name, slot in self.out_slots.items()}
 
 

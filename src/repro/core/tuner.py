@@ -5,7 +5,9 @@ Pipeline:  for each (S, G) hypothesis
              inter-stage MILP over frontier samples (Eq. 2-3)
            pick the best (S, G) by Eq. 1.
 
-Search-space presets reproduce the paper's baselines (Fig. 13 breakdown):
+Search-space presets reproduce the paper's baselines (Fig. 13 breakdown);
+docs/search-spaces.md documents each preset's exact knob grid and which
+baseline system it corresponds to:
 
     megatron   parallelism only, full CKPT, ZeRO-1       (Megatron-LM space)
     ckpt       + activation-checkpoint tuning            (Aceso/AdaPipe space)
@@ -14,6 +16,10 @@ Search-space presets reproduce the paper's baselines (Fig. 13 breakdown):
     mist       everything co-tuned (+ imbalance awareness)
     uniform    mist knobs but one shared config for all stages
                (Yuan et al.-style heuristic)
+
+The (S, G) loop itself is executed by the sweep executor in
+core/sweep.py (`TuneSpec.workers`); docs/architecture.md has the full
+dataflow of one tune() call.
 """
 from __future__ import annotations
 
@@ -53,6 +59,14 @@ class TuneSpec:
     # frontier memoization.  "legacy": the pre-compilation interpreted path,
     # kept as the equivalence/speedup baseline (identical results).
     engine: str = "compiled"
+    # (S, G) sweep execution (core/sweep.py; docs/architecture.md):
+    #   0   plain in-loop sweeps (the PR-1 serial compiled engine, kept as
+    #       the speedup baseline),
+    #   1   G-collapsed executor in-process (default),
+    #   >=2 G-collapsed executor across that many forked worker processes,
+    #       frontier-memo shards merged at the join.
+    # The selected plan is identical for every value (asserted in tests).
+    workers: int = 1
 
 
 @dataclass
@@ -71,6 +85,9 @@ class TuneReport:
     infeasible: bool = False
     n_swept: int = 0            # points actually swept (memo misses only)
     n_memo_hits: int = 0        # stage hypotheses served from the memo
+    workers: int = 1            # sweep-executor worker processes used
+    n_cache_hits: int = 0       # knob-tuple tape-cache hits (executor path)
+    n_cache_misses: int = 0
 
 
 def _space_knobs(space: str, layers: int) -> Dict:
@@ -146,11 +163,17 @@ class MistTuner:
         opts = sorted({max(1, base + k) for k in range(-w, w + 2)})
         return [l for l in opts if l <= L]
 
+    def _memo_key(self, *, layers: int, n_dev: int, G: int, role, inflight,
+                  knobs) -> Tuple:
+        """Frontier-memo key; also the sweep executor's shard/merge key."""
+        return (layers, n_dev, G, role, float(inflight),
+                tuple(knobs["zeros"]), tuple(knobs["ratios"]),
+                tuple(knobs["ratio_dims"]), knobs["ckpt"])
+
     def _frontier(self, *, layers: int, n_dev: int, G: int, role, inflight,
                   knobs) -> IntraStageResult:
-        key = (layers, n_dev, G, role, float(inflight),
-               tuple(knobs["zeros"]), tuple(knobs["ratios"]),
-               tuple(knobs["ratio_dims"]), knobs["ckpt"])
+        key = self._memo_key(layers=layers, n_dev=n_dev, G=G, role=role,
+                             inflight=inflight, knobs=knobs)
         if self.spec.engine != "legacy":
             hit = self._frontier_memo.get(key)
             if hit is not None:
@@ -201,6 +224,13 @@ class MistTuner:
             out.append(cs)
         return out
 
+    def _cells(self) -> List[Tuple[int, int]]:
+        """The (S, G) hypothesis cells `tune` visits, in loop order."""
+        return [(S, G)
+                for S in self.stage_counts()
+                for G in self.grad_accums()
+                if not self.spec.global_batch % G]
+
     # -- main ----------------------------------------------------------------
     def tune(self) -> TuneReport:
         t0 = time.time()
@@ -212,35 +242,64 @@ class MistTuner:
         self._n_points = 0
         self._memo_hits = 0
         self._n_swept = 0
-        for S in self.stage_counts():
-            for G in self.grad_accums():
-                # divisor-derived G always divides the global batch; only a
-                # user-supplied spec.grad_accums can violate it — skip those
-                if spec.global_batch % G:
+        sweep_stats = None
+        if spec.engine != "legacy" and spec.workers >= 1:
+            # (S, G) sweep executor: G-collapsed hypothesis sweeps, run in
+            # process (workers=1) or across forked workers, filling the
+            # frontier memo up front; the loop below then runs entirely
+            # from the memo.  Plan-identical to the plain loop by
+            # construction (see core/sweep.py; tests/test_sweep.py).
+            from repro.core.sweep import prefetch_frontiers
+            sweep_stats = prefetch_frontiers(self, self._cells(), knobs,
+                                             workers=spec.workers)
+            self._n_swept += sweep_stats.n_swept
+        # gather each cell's candidate lists (all frontier-memo reads after
+        # a prefetch), solve the independent per-cell MILPs — on the worker
+        # pool when the executor is parallel — then reduce in loop order,
+        # which keeps tie-breaking identical to the serial engine.
+        sols: Dict[Tuple[int, int], Optional[InterStageSolution]] = {}
+        milp_jobs: List[Tuple[int, int, List[List[StageCand]]]] = []
+        cells = self._cells()
+        for S, G in cells:
+            if spec.space == "uniform" and S > 1:
+                sols[(S, G)] = self._solve_uniform(S, G, knobs)
+            else:
+                cands = self._cands_for(S, G, knobs)
+                if any(not cs for cs in cands):
                     continue
-                if spec.space == "uniform" and S > 1:
-                    sol = self._solve_uniform(S, G, knobs)
-                else:
-                    cands = self._cands_for(S, G, knobs)
-                    if any(not cs for cs in cands):
-                        continue
-                    sol = solve_milp(cands,
-                                     total_layers=spec.arch.num_layers,
-                                     total_devices=spec.n_devices, G=G)
-                    n_milp += 1
-                if sol is None:
-                    continue
-                per_sg.append((S, G, sol.objective))
-                if best is None or sol.objective < best[0]:
-                    best = (sol.objective, S, G, sol)
+                milp_jobs.append((S, G, cands))
+        if milp_jobs:
+            n_milp += len(milp_jobs)
+            if sweep_stats is not None and spec.workers > 1:
+                from repro.core.sweep import solve_cells
+                sols.update(solve_cells(
+                    milp_jobs, total_layers=spec.arch.num_layers,
+                    total_devices=spec.n_devices, workers=spec.workers))
+            else:
+                for S, G, cands in milp_jobs:
+                    sols[(S, G)] = solve_milp(
+                        cands, total_layers=spec.arch.num_layers,
+                        total_devices=spec.n_devices, G=G)
+        for S, G in cells:
+            sol = sols.get((S, G))
+            if sol is None:
+                continue
+            per_sg.append((S, G, sol.objective))
+            if best is None or sol.objective < best[0]:
+                best = (sol.objective, S, G, sol)
         dt = time.time() - t0
+        workers_used = sweep_stats.workers_used if sweep_stats else 0
+        c_hits = sweep_stats.cache_hits if sweep_stats else 0
+        c_miss = sweep_stats.cache_misses if sweep_stats else 0
         if best is None:
             return TuneReport(plan=None, objective=float("inf"),
                               throughput_samples=0.0, throughput_tokens=0.0,
                               space=spec.space, n_points=self._n_points,
                               n_milp=n_milp, tune_seconds=dt,
                               infeasible=True, n_swept=self._n_swept,
-                              n_memo_hits=self._memo_hits)
+                              n_memo_hits=self._memo_hits,
+                              workers=workers_used, n_cache_hits=c_hits,
+                              n_cache_misses=c_miss)
         obj, S, G, sol = best
         plan = self._to_plan(sol, G)
         return TuneReport(
@@ -249,7 +308,9 @@ class MistTuner:
             throughput_tokens=spec.global_batch * spec.seq_len / obj,
             space=spec.space, n_points=self._n_points, n_milp=n_milp,
             tune_seconds=dt, best_S=S, best_G=G, per_sg=per_sg,
-            n_swept=self._n_swept, n_memo_hits=self._memo_hits)
+            n_swept=self._n_swept, n_memo_hits=self._memo_hits,
+            workers=workers_used, n_cache_hits=c_hits,
+            n_cache_misses=c_miss)
 
     def _solve_uniform(self, S: int, G: int, knobs
                        ) -> Optional[InterStageSolution]:

@@ -22,6 +22,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs.base import SHAPES, ArchConfig, ShapeConfig, get_arch, list_archs
 from repro.core.plan import Plan, single_stage_plan
 from repro.launch.mesh import make_production_mesh
@@ -232,8 +233,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
                 "reason": "shape not applicable (see DESIGN.md §4)"}
     if view:
         dpv, tpv = (int(x) for x in view.split("x"))
-        mesh = jax.make_mesh((dpv, tpv), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((dpv, tpv), ("data", "model"))
         plan_overrides = dict(plan_overrides or {})
         plan_overrides.setdefault("dp", dpv)
         plan_overrides.setdefault("tp", tpv)
@@ -246,7 +246,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     params_sds, axes_table = abstract_params(cfg)
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         if shape.kind == "train":
             step = make_train_step(model, plan, mesh)
             state_abs = OPT.init_state(params_sds, axes_table, plan.stages[0])

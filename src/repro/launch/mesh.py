@@ -1,10 +1,13 @@
 """Production mesh construction (defined as functions so importing this
-module never touches jax device state)."""
+module never touches jax device state).  Meshes are built through
+`repro.compat` so both old (0.4.x) and current jax APIs work."""
 from __future__ import annotations
 
 from typing import Optional, Tuple
 
 import jax
+
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -12,8 +15,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     for the two-pod dry-run."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_plan_mesh(dp: int, tp: int, *, stages: int = 1,
@@ -29,13 +31,11 @@ def make_plan_mesh(dp: int, tp: int, *, stages: int = 1,
         axes += ("pod",)
     shape += (dp, tp)
     axes += ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(n: Optional[int] = None, tp: int = 1):
     """Small CPU mesh for tests/examples."""
     n = n or len(jax.devices())
     dp = n // tp
-    return jax.make_mesh((dp, tp), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((dp, tp), ("data", "model"))

@@ -10,6 +10,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+from repro import compat
 import numpy as np
 
 
@@ -55,7 +56,7 @@ def main():
     mesh = make_host_mesh(n, 1)
     plan = single_stage_plan(cfg.num_layers, dp=n, tp=1, micro_batch=1,
                              grad_accum=1, zero=0, ckpt_layers=0)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         params, _ = model.init(jax.random.PRNGKey(0))
         prompts = jax.random.randint(jax.random.PRNGKey(1),
                                      (args.batch, args.prompt_len), 0,

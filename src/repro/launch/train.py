@@ -18,6 +18,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+from repro import compat
 import numpy as np
 
 
@@ -87,7 +88,7 @@ def main():
                              zero=1, ckpt_layers=rcfg.num_layers // 2)
     mesh = make_host_mesh(n, tp)
     seq = 128
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         step = make_train_step(model, plan, mesh)
         state, shardings = init_sharded_state(model, plan, mesh,
                                               jax.random.PRNGKey(0))

@@ -209,10 +209,17 @@ def _remat_wrap(body: Callable, policy: str, offload: bool) -> Callable:
     if policy == "none" and not offload:
         return body
     if offload:
-        pol = jax.checkpoint_policies.save_and_offload_only_these_names(
-            names_which_can_be_saved=[],
-            names_which_can_be_offloaded=["resid", "layer_in"],
-            offload_src="device", offload_dst="pinned_host")
+        from repro import compat
+        if compat.host_memory_kind() is None:
+            # no separate host memory space on this backend: keep the same
+            # saved/recomputed segmentation, resident instead of offloaded
+            pol = jax.checkpoint_policies.save_only_these_names(
+                "resid", "layer_in")
+        else:
+            pol = jax.checkpoint_policies.save_and_offload_only_these_names(
+                names_which_can_be_saved=[],
+                names_which_can_be_offloaded=["resid", "layer_in"],
+                offload_src="device", offload_dst=compat.host_memory_kind())
     elif policy == "dots":
         pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
     elif policy == "full":

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ArchConfig
 from repro.core.plan import Plan
 from repro.models import layers as L
@@ -129,6 +130,14 @@ def make_pipeline_loss(model: Model, plan: Plan, mesh: Mesh) -> Callable:
     partial-manual shard_map over the 'stage' axis."""
     cfg = model.cfg
     assert supports_pipeline(cfg), f"pipeline unsupported for {cfg.family}"
+    if not compat.supports_pipeline_stage_mapping():
+        # fail fast with a clear error: on jax 0.4.x the bundled XLA SPMD
+        # partitioner aborts the whole process (CHECK failure) on
+        # partial-manual scan+ppermute, so don't even build the program.
+        raise NotImplementedError(
+            "pipeline stage mapping needs partial-manual shard_map "
+            "(jax.shard_map); this jax is too old — single-stage SPMD and "
+            "all tuning/analysis paths remain available")
     S = plan.num_stages
     G = plan.grad_accum
     st0 = plan.stages[0]
@@ -210,9 +219,9 @@ def make_pipeline_loss(model: Model, plan: Plan, mesh: Mesh) -> Callable:
     # check_vma=False: inner scans (chunked xent, layer scan) carry
     # stage-varying values from unvarying seeds; the loss output is made
     # replicated explicitly via the psum over 'stage'.
-    smapped = jax.shard_map(pipelined, mesh=mesh, in_specs=in_specs,
-                            out_specs=P(), axis_names=manual,
-                            check_vma=False)
+    smapped = compat.shard_map(pipelined, mesh=mesh, in_specs=in_specs,
+                               out_specs=P(), axis_names=manual,
+                               check_vma=False)
 
     def loss_fn(params, batch):
         with use_rules(rules):
@@ -256,14 +265,15 @@ def make_pipeline_train_step(model: Model, plan: Plan, mesh: Mesh,
 
     # optimizer state mirrors the param shardings (master/mu/nu f32)
     def entry_shardings(ratio):
+        hk = compat.host_memory_kind()
         out = {}
         for n, sds in params_sds.items():
             sh = pspecs[n]
             k = OPT.split_k(n, sds.shape, axes_table, ratio)
             if k:
-                out[n] = {"host": NamedSharding(mesh, sh.spec,
-                                                memory_kind="pinned_host"),
-                          "dev": NamedSharding(mesh, sh.spec)}
+                host = (NamedSharding(mesh, sh.spec, memory_kind=hk)
+                        if hk else NamedSharding(mesh, sh.spec))
+                out[n] = {"host": host, "dev": NamedSharding(mesh, sh.spec)}
             else:
                 out[n] = sh
         return out

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core.plan import StageConfig
 from repro.models.common import Axes, Params
 from repro.parallel.sharding import LAYER_AXES, MeshAxes, opt_spec
@@ -123,9 +124,10 @@ def state_shardings(state, axes_table: Axes, cfg, mesh: Mesh, ma: MeshAxes,
             spec = opt_spec(n, state["params"][n].shape, axes_table[n], mesh,
                             ma, zero=stage.zero, ep_ok=ep_ok)
             if is_split(leaf):
-                e[n] = {"host": NamedSharding(mesh, spec,
-                                              memory_kind="pinned_host"),
-                        "dev": NamedSharding(mesh, spec)}
+                hk = compat.host_memory_kind()
+                host = (NamedSharding(mesh, spec, memory_kind=hk)
+                        if hk else NamedSharding(mesh, spec))
+                e[n] = {"host": host, "dev": NamedSharding(mesh, spec)}
             else:
                 e[n] = NamedSharding(mesh, spec)
         out[entry] = e
@@ -157,11 +159,17 @@ def adam_update(state: Dict[str, Any], grads: Params, acfg: AdamConfig,
     c1 = 1.0 - acfg.b1 ** step.astype(jnp.float32)
     c2 = 1.0 - acfg.b2 ** step.astype(jnp.float32)
 
+    _hk = compat.host_memory_kind()
+
     def to_dev(x, entry, name):
+        if _hk is None:         # no host memory space: already resident
+            return x
         sh = shardings[entry][name]["host"].with_memory_kind("device")
         return jax.device_put(x, sh)
 
     def to_host(x, entry, name):
+        if _hk is None:
+            return x
         return jax.device_put(x, shardings[entry][name]["host"])
 
     new_params, new_master, new_mu, new_nu = {}, {}, {}, {}

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.plan import Plan, StageConfig
 from repro.models.common import ExecConfig, use_rules
@@ -44,11 +45,16 @@ class CompiledStep:
     exec_cfg: ExecConfig
 
 
+def _is_host_leaf(s) -> bool:
+    hk = compat.host_memory_kind()
+    return hk is not None and getattr(s, "memory_kind", None) == hk
+
+
 def _constrain_device_leaves(tree, shardings):
     """Pin device-memory leaves to their planned shardings (host leaves are
     already placed by device_put inside the optimizer)."""
     def leaf(x, s):
-        if isinstance(s, NamedSharding) and s.memory_kind != "pinned_host":
+        if isinstance(s, NamedSharding) and not _is_host_leaf(s):
             return jax.lax.with_sharding_constraint(x, s)
         return x
     return jax.tree.map(leaf, tree, shardings)
@@ -129,8 +135,7 @@ def make_train_step(model: Model, plan: Plan, mesh: Mesh,
         in_shardings=(st_shardings, None),
         donate_argnums=(0,) if donate else (),
     )
-    has_host = any(getattr(s, "memory_kind", None) == "pinned_host"
-                   for s in jax.tree.leaves(st_shardings))
+    has_host = any(_is_host_leaf(s) for s in jax.tree.leaves(st_shardings))
     if has_host:
         def fn(state, batch):
             new_state, metrics = jit_fn(state, batch)
@@ -164,9 +169,7 @@ def init_sharded_state(model: Model, plan: Plan, mesh: Mesh, rng: jax.Array
             s, NamedSharding) else s, shardings,
         is_leaf=lambda x: isinstance(x, NamedSharding))
     state = jax.jit(build, out_shardings=dev_shardings)()
-    needs_move = any(
-        getattr(s, "memory_kind", None) == "pinned_host"
-        for s in jax.tree.leaves(shardings))
+    needs_move = any(_is_host_leaf(s) for s in jax.tree.leaves(shardings))
     if needs_move:
         state = jax.device_put(state, shardings)
     return state, shardings

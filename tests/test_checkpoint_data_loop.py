@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.training.checkpoint import Checkpointer, _flatten, _unflatten
 from repro.training.data import BatchSpec, PackedCorpus, SyntheticLM, \
     microbatched
@@ -84,8 +85,7 @@ def test_restore_specific_step(tmp_path):
 def test_elastic_reshard_to_device(tmp_path):
     """Restore with target shardings places leaves on the current mesh."""
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("data",))
     ck = Checkpointer(tmp_path)
     ck.save(1, {"w": np.ones((4, 4), np.float32)})
     sh = {"w": NamedSharding(mesh, P("data", None))}

@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import get_arch
 from repro.core.plan import Plan, StageConfig, megatron_baseline_plan, \
     single_stage_plan
@@ -19,10 +20,9 @@ from repro.parallel import sharding as SH
 
 def _mesh(dp=1, tp=1):
     if dp * tp <= len(jax.devices()):
-        return jax.make_mesh((dp, tp), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return compat.make_mesh((dp, tp), ("data", "model"))
     # spec-only tests: abstract meshes carry shapes without devices
-    return jax.sharding.AbstractMesh((dp, tp), ("data", "model"))
+    return compat.abstract_mesh((dp, tp), ("data", "model"))
 
 
 # -- choose_tp_dim / param_spec ------------------------------------------------

@@ -1,0 +1,53 @@
+#!/usr/bin/env python
+"""Verify that relative markdown links/references in docs/*.md (plus the
+top-level ROADMAP.md) point at files that exist, so the docs cross-links
+stay valid as the tree moves.  External (http/https/mailto) links and
+intra-page anchors are ignored.  Exit code 1 on any broken reference."""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# backtick references like `src/repro/core/sweep.py` or `docs/foo.md`
+TICK = re.compile(r"`([A-Za-z0-9_./-]+\.(?:py|md|yml|yaml|toml|txt))`")
+
+
+def refs(md: pathlib.Path):
+    text = md.read_text()
+    for m in LINK.finditer(text):
+        yield m.group(1), "link"
+    for m in TICK.finditer(text):
+        yield m.group(1), "ref"
+
+
+def main() -> int:
+    bad = []
+    files = sorted(ROOT.glob("docs/*.md")) + [ROOT / "ROADMAP.md"]
+    for md in files:
+        if not md.exists():
+            continue
+        for target, kind in refs(md):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            cand = (md.parent / path).resolve()
+            cand_root = (ROOT / path).resolve()
+            if not cand.exists() and not cand_root.exists():
+                bad.append(f"{md.relative_to(ROOT)}: broken {kind} -> "
+                           f"{target}")
+    for b in bad:
+        print(b)
+    if bad:
+        print(f"{len(bad)} broken doc reference(s)")
+        return 1
+    print(f"doc links OK ({len(files)} files checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
