@@ -16,6 +16,15 @@
     between runs) and warm (the persistent workers' knob-tuple caches
     left alone — what repeated `tune()` calls in one session observe).
 
+A fourth measurement compares the tape *evaluation backends* on one large
+candidate grid (`run_backend_speedup`): the numpy instruction loop vs the
+jax lowering (`Tape.lower_jax`) in both exact mode (per-op device
+execution, bitwise identical under x64 — what `backend="jax"` runs) and
+fused mode (one `jax.jit` program; FMA-contracted on CPU, so only close,
+not bitwise).  On accelerators the fused path is the headline; on a
+small CPU host expect parity-or-overhead below the `auto` threshold —
+which is exactly why `auto` thresholds on grid size.
+
 Run with --smoke for a CI-sized invocation; --json PATH additionally
 writes the emitted rows as a JSON document (uploaded as a CI artifact).
 """
@@ -25,6 +34,8 @@ import json
 import sys
 import time
 from typing import List
+
+import numpy as np
 
 from benchmarks.common import FAST_TUNE, emit, gpt_config, train_shape
 from repro.core.costmodel import StageCostModel
@@ -137,6 +148,84 @@ def run_parallel_speedup(size: str = "6.7b", n_dev: int = 32, gbs: int = 64,
     ]
 
 
+def run_backend_speedup(size: str = "6.7b", rows: int = 1_000_000,
+                        repeats: int = 3) -> List[str]:
+    """Tape backends on one large synthetic candidate grid: numpy vs jax
+    exact (bitwise-asserted) vs jax fused (`jax.jit`, closeness-asserted;
+    its one-time compile is reported separately from the steady state).
+    Emits a skip row — instead of failing — when jax is unavailable, so
+    numpy-only containers still run the benchmark file end to end."""
+    from repro import compat
+    cfg = gpt_config(size)
+    scm = StageCostModel(cfg, 2048)
+    tape = scm.tape_time
+    rng = np.random.default_rng(0)
+    env = {name: rng.uniform(1.0, 8.0, rows)
+           for name, _slot in tape.sym_loads}
+
+    def best_of(fn):
+        b = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            fn()
+            b = min(b, time.perf_counter() - t0)
+        return b
+
+    scratch = tape.make_scratch()
+    ref = tape.run(env, scratch)
+    t_np = best_of(lambda: tape.run(env, scratch))
+    out = [emit("tuning_time/backend_numpy", t_np * 1e6,
+                f"seconds={t_np:.3f} rows={rows} instrs={len(tape)}")]
+    if not compat.has_jax():
+        out.append(emit("tuning_time/backend_jax", 0.0,
+                        "skipped=jax_unavailable"))
+        return out
+    jax, _jnp = compat.require_jax()
+    with compat.enable_x64():
+        exact = tape.lower_jax()
+        run_exact = lambda: jax.block_until_ready(  # noqa: E731
+            list(exact(env).values()))
+        got = exact(env)
+        for k in ref:
+            g = np.asarray(got[k])
+            r = np.broadcast_to(ref[k], g.shape)
+            if tape.jax_bitexact:       # same guard the dispatcher uses
+                assert np.array_equal(r, g), \
+                    f"jax exact backend not bitwise identical on {k}"
+            else:                       # pow/log2 tape: closeness only
+                assert np.allclose(g, r, rtol=1e-12, atol=0), \
+                    f"jax exact backend drifted on non-bitexact op: {k}"
+        t_ex = best_of(run_exact)
+        fused = tape.lower_jax(fused=True)
+        t0 = time.perf_counter()
+        fgot = fused(env)
+        jax.block_until_ready(list(fgot.values()))
+        t_compile = time.perf_counter() - t0
+        rel = 0.0
+        for k in ref:
+            f = np.asarray(fgot[k])
+            r = np.broadcast_to(ref[k], f.shape)
+            denom = np.maximum(np.abs(r), 1e-300)
+            rel = max(rel, float(np.max(np.abs(f - r) / denom)))
+        # FMA contraction drift is ~1-2 ulp per op, but cancellation in
+        # the d_delta-style subtractions amplifies it; ~1e-10 observed
+        assert rel < 1e-8, \
+            f"jax fused backend drifted beyond expectations: {rel:.2e}"
+        t_fu = best_of(lambda: jax.block_until_ready(
+            list(fused(env).values())))
+    out += [
+        emit("tuning_time/backend_jax_exact", t_ex * 1e6,
+             f"seconds={t_ex:.3f} bitwise_identical={tape.jax_bitexact}"),
+        emit("tuning_time/backend_jax_fused", t_fu * 1e6,
+             f"seconds={t_fu:.3f} compile_s={t_compile:.2f} "
+             f"max_rel_err={rel:.1e}"),
+        emit("tuning_time/backend_speedup", 0.0,
+             f"{t_np / t_ex:.2f}x exact {t_np / t_fu:.2f}x fused "
+             f"(numpy/jax; >1 means jax wins)"),
+    ]
+    return out
+
+
 def run_batch_speedup(size: str = "6.7b") -> List[str]:
     """Batched symbolic substitution vs per-config evaluation loop."""
     cfg = gpt_config(size)
@@ -174,9 +263,11 @@ def run(smoke: bool = False) -> List[str]:
                 + run_engine_speedup(size="1.3b", n_dev=8, gbs=16)
                 + run_parallel_speedup(size="1.3b", n_dev=8, gbs=16,
                                        repeats=3)
-                + run_batch_speedup(size="1.3b"))
+                + run_batch_speedup(size="1.3b")
+                + run_backend_speedup(size="1.3b", rows=120_000, repeats=2))
     return (run_tuning_time() + run_engine_speedup()
-            + run_parallel_speedup() + run_batch_speedup())
+            + run_parallel_speedup() + run_batch_speedup()
+            + run_backend_speedup())
 
 
 def rows_to_json(rows: List[str]) -> dict:

@@ -17,13 +17,76 @@ jax (0.4.x) where those spellings do not exist yet:
 Every mesh/shard_map construction in the repo goes through this module so
 both API generations work.  Evaluate capabilities at call time (not import
 time) so test-time monkeypatching and upgrades behave predictably.
+
+The module also gates jax *availability* for the analysis stack: the
+tuner / cost-model path is pure numpy and must keep working in numpy-only
+containers, with the optional jax tape backend (``Tape.lower_jax``,
+``StageCostModel(backend=...)``) degrading cleanly when jax is absent.
+Those callers probe ``has_jax()`` / ``require_jax()`` here instead of
+importing jax themselves.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
-from typing import Sequence
+from typing import Sequence, Tuple
 
-import jax
+try:
+    import jax
+except Exception as _e:          # numpy-only container: analysis-only mode
+    jax = None                   # type: ignore[assignment]
+    _JAX_IMPORT_ERROR: Exception = _e
+
+
+def has_jax() -> bool:
+    """Whether jax imported successfully (tape backends probe this)."""
+    return jax is not None
+
+
+def require_jax() -> Tuple["jax", "jax.numpy"]:
+    """(jax, jax.numpy), or ImportError with the original import failure."""
+    if jax is None:
+        raise ImportError(
+            "jax is unavailable in this environment; use the numpy tape "
+            "backend") from _JAX_IMPORT_ERROR
+    import jax.numpy as jnp
+    return jax, jnp
+
+
+def jax_x64_enabled() -> bool:
+    """Whether jax currently produces 64-bit floats (honors both the
+    global ``jax_enable_x64`` flag and the thread-local ``enable_x64``
+    context).  The tape backends' bitwise-equivalence-to-numpy guarantee
+    holds only when this is True; ``backend="auto"`` refuses jax
+    otherwise."""
+    if jax is None:
+        return False
+    import numpy as np
+    import jax.numpy as jnp
+    return jnp.result_type(float) == np.float64
+
+
+def enable_x64():
+    """Context manager forcing 64-bit jax types inside the block (the
+    backend equivalence suite runs under it).  Uses
+    ``jax.experimental.enable_x64`` where it exists; falls back to
+    flipping the config flag (not thread-safe, but only reachable on jax
+    versions without the scoped context)."""
+    if jax is None:
+        raise ImportError("jax is unavailable; cannot enable x64")
+    ctx = getattr(getattr(jax, "experimental", None), "enable_x64", None)
+    if ctx is not None:
+        return ctx()
+
+    @contextlib.contextmanager
+    def _flag():
+        old = bool(jax.config.jax_enable_x64)
+        jax.config.update("jax_enable_x64", True)
+        try:
+            yield
+        finally:
+            jax.config.update("jax_enable_x64", old)
+    return _flag()
 
 
 def axis_type_auto():

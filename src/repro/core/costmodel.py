@@ -178,20 +178,52 @@ def arch_stats(cfg: ArchConfig) -> ArchStats:
 SYMS = ("b", "dp", "tp", "L", "G", "ckpt", "z1", "z2", "z3",
         "wo", "go", "oo", "ao", "inflight")
 
+BACKENDS = ("numpy", "jax", "auto")
+
+# "auto" switches a tape run to jax at this many grid rows — the measured
+# numpy/jax crossover on a 2-core CPU host (XLA multithreads the
+# elementwise kernels, numpy does not; accelerators cross over far
+# earlier).  Instance attribute so tests/benchmarks can lower it.
+JAX_AUTO_THRESHOLD = 1 << 19
+
 
 class StageCostModel:
-    """Symbolic runtime + memory for one pipeline stage of `cfg` at `seq`."""
+    """Symbolic runtime + memory for one pipeline stage of `cfg` at `seq`.
+
+    ``backend`` selects how compiled tapes execute:
+
+      * ``"numpy"`` (default) — the in-process numpy instruction loop with
+        scratch-buffer reuse.
+      * ``"jax"`` — ``Tape.lower_jax()`` exact mode: per-instruction jax
+        ops on device arrays, bitwise identical to numpy (the
+        plan-identity guarantee in tests/test_tape_backends.py).  Runs
+        jax only where that guarantee actually holds — x64 enabled and
+        the tape free of non-correctly-rounded ops — and silently
+        degrades to numpy otherwise or when jax is missing entirely
+        (``repro.compat`` gates it).
+      * ``"auto"`` — like "jax", but additionally stays on numpy below
+        ``jax_auto_threshold`` grid rows.
+
+    Downstream consumers (interference model, Pareto selection) always
+    see numpy float64 arrays regardless of backend.
+    """
 
     def __init__(self, cfg: ArchConfig, seq_len: int, *,
                  hw: HardwareSpec = V5E, cp: CostParams = CostParams(),
                  has_embed: bool = True, has_head: bool = True,
                  interference: Optional[InterferenceModel] = None,
-                 sequence_parallel: bool = True):
+                 sequence_parallel: bool = True,
+                 backend: str = "numpy"):
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; have {BACKENDS}")
         self.cfg, self.seq, self.hw, self.cp = cfg, seq_len, hw, cp
         self.has_embed, self.has_head = has_embed, has_head
         self.intf = interference or InterferenceModel()
         self.st = arch_stats(cfg)
         self.sp = sequence_parallel
+        self.backend = backend
+        self.jax_auto_threshold = JAX_AUTO_THRESHOLD
+        self.last_backend = "numpy"     # backend of the most recent tape run
         self._build()
 
     # -- expression construction ---------------------------------------------
@@ -397,6 +429,38 @@ class StageCostModel:
             g2g += list(self._first_extra)
         return (tot(phase.compute), tot(g2g), tot(phase.d2h), tot(phase.h2d))
 
+    def _use_jax(self, tape, e: Dict[str, Any]) -> bool:
+        """Whether this tape run should execute on the jax backend.
+
+        The identical-results guarantee is refused structurally, never
+        assumed: no jax without x64 (f32 evaluation would silently drift
+        from the numpy path and poison the backend-interchangeable
+        knob-tuple cache), and no jax for tapes containing ops that are
+        not correctly rounded in both numpy and XLA (``pow``/``log2``;
+        see ``BITEXACT_OPS``) — in either case the model degrades to
+        numpy, same as when jax is absent entirely."""
+        if self.backend == "numpy":
+            return False
+        from repro import compat
+        if not compat.has_jax():
+            return False                # numpy-only container: degrade
+        if not compat.jax_x64_enabled() or not tape.jax_bitexact:
+            return False                # bitwise guarantee would be void
+        if self.backend == "jax":
+            return True
+        # auto: jax pays off only on large grids
+        n = max((v.shape[0] for v in e.values() if v.ndim), default=0)
+        return n >= self.jax_auto_threshold
+
+    def _run_tape(self, tape, e: Dict[str, Any]) -> Dict[str, Any]:
+        """One tape evaluation on the selected backend; numpy values out."""
+        if self._use_jax(tape, e):
+            self.last_backend = "jax"
+            raw = tape.lower_jax()(e)
+            return {k: np.asarray(v) for k, v in raw.items()}
+        self.last_backend = "numpy"
+        return tape.run(e, self._scratch[id(tape)])
+
     _TAPE_CACHE_MAX = 128
 
     def _cache_get(self, key):
@@ -419,7 +483,7 @@ class StageCostModel:
         DAG producing every output, then the batched interference model on
         the precomputed phase-channel totals."""
         e = self._env(env)
-        raw = self.tape.run(e, self._scratch[id(self.tape)])
+        raw = self._run_tape(self.tape, e)
         vals = {k: np.asarray(raw[k], np.float64) for k in self.items}
         mem_fwd = np.asarray(raw["mem_fwd"], np.float64)
         mem_bwd = np.asarray(raw["mem_bwd"], np.float64)
@@ -469,7 +533,7 @@ class StageCostModel:
             hit = self._cache_get(key)
             if hit is not None:
                 return hit
-        raw = self.tape_mem.run(e, self._scratch[id(self.tape_mem)])
+        raw = self._run_tape(self.tape_mem, e)
         mem_fwd = np.asarray(raw["mem_fwd"], np.float64)
         mem_bwd = np.asarray(raw["mem_bwd"], np.float64)
         out = {"mem_fwd": mem_fwd, "mem_bwd": mem_bwd,
@@ -502,7 +566,7 @@ class StageCostModel:
             if hit is not None:
                 return dict(hit, t_step=e["G"] * hit["t_stable"]
                             + hit["d_delta"])
-        raw = self.tape_time.run(e, self._scratch[id(self.tape_time)])
+        raw = self._run_tape(self.tape_time, e)
         vals = {k: np.asarray(raw[k], np.float64) for k in self.items}
         phases = self._phases(raw)
         t_stable = phases["stable"]

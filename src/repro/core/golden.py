@@ -1,0 +1,125 @@
+"""Golden-plan regression fixtures: pinned fingerprints of the tuner's
+selected plan + objective for every search-space preset.
+
+The tuning stack guarantees *identical results* across engines, worker
+counts, and tape backends; this module pins the results themselves, so an
+unintended change to the cost model, the schedule template, the Pareto
+selection, or the MILP shows up as a readable field-level diff instead of
+a silently different plan.  One fixture exists per (SPACES preset, model
+config) cell under ``tests/golden/``; ``tests/test_golden_plans.py``
+recomputes each cell and compares fingerprints, and
+``python tools/regen_golden.py`` rewrites the fixtures after an
+*intentional* change (commit the diff together with the change that
+caused it).
+
+Fingerprints are sha256 over a canonical JSON document.  Floats are
+formatted with ``%.12g`` — coarse enough to absorb last-ulp noise across
+BLAS/platforms, fine enough that any real modeling change flips the
+fingerprint.  The selection itself depends on the MILP solver's
+tie-breaking on degenerate-optimum cells, so CI pins scipy to the minor
+the fixtures were generated under (see .github/workflows/ci.yml); bump
+the pin and regenerate together.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import get_arch
+from repro.core.tuner import SPACES, MistTuner, TuneSpec
+
+# two paper-relevant model families: a dense GQA decoder and an MoE
+GOLDEN_ARCHS: Tuple[str, ...] = ("granite-3-8b", "qwen2-moe-a2.7b")
+GOLDEN_SPACES: Tuple[str, ...] = SPACES
+
+# small but non-trivial workload: 8 devices leave room for S in {1, 2}
+# and a real (dp, tp, zero, ckpt, offload) grid per stage
+_WORKLOAD = dict(seq_len=2048, global_batch=16, n_devices=8,
+                 stage_counts=(1, 2), grad_accums=(2, 4))
+
+GOLDEN_DIR = Path(__file__).resolve().parents[3] / "tests" / "golden"
+
+
+def golden_spec(space: str, arch: str) -> TuneSpec:
+    return TuneSpec(arch=get_arch(arch), space=space, **_WORKLOAD)
+
+
+def golden_path(space: str, arch: str, base: Optional[Path] = None) -> Path:
+    return (base or GOLDEN_DIR) / f"{space}__{arch.replace('.', 'p')}.json"
+
+
+def _fmt(x: float) -> str:
+    return f"{float(x):.12g}"
+
+
+def compute_doc(space: str, arch: str) -> Dict:
+    """Run the tuner for one golden cell and canonicalize its result."""
+    rep = MistTuner(golden_spec(space, arch)).tune()
+    plan = None
+    if rep.plan is not None:
+        plan = json.loads(rep.plan.to_json())
+    return {
+        "space": space,
+        "arch": arch,
+        "workload": {k: list(v) if isinstance(v, tuple) else v
+                     for k, v in _WORKLOAD.items()},
+        "objective": _fmt(rep.objective),
+        "best_S": rep.best_S,
+        "best_G": rep.best_G,
+        "infeasible": rep.infeasible,
+        "per_sg": [[S, G, _fmt(obj)] for S, G, obj in rep.per_sg],
+        "plan": plan,
+    }
+
+
+def fingerprint(doc: Dict) -> str:
+    blob = json.dumps(doc, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def diff_docs(want: Dict, got: Dict, prefix: str = "") -> List[str]:
+    """Readable field-level differences between two golden documents."""
+    if type(want) is not type(got):
+        return [f"{prefix or '<root>'}: {want!r} != {got!r}"]
+    if isinstance(want, dict):
+        out: List[str] = []
+        for k in sorted(set(want) | set(got)):
+            p = f"{prefix}.{k}" if prefix else str(k)
+            if k not in want:
+                out.append(f"{p}: <absent in golden> != {got[k]!r}")
+            elif k not in got:
+                out.append(f"{p}: {want[k]!r} != <absent>")
+            else:
+                out.extend(diff_docs(want[k], got[k], p))
+        return out
+    if isinstance(want, list):
+        if len(want) != len(got):
+            return [f"{prefix}: length {len(want)} != {len(got)}"]
+        out = []
+        for i, (a, b) in enumerate(zip(want, got)):
+            out.extend(diff_docs(a, b, f"{prefix}[{i}]"))
+        return out
+    if want != got:
+        return [f"{prefix}: {want!r} != {got!r}"]
+    return []
+
+
+def regen(base: Optional[Path] = None,
+          only: Optional[Tuple[str, str]] = None) -> List[Path]:
+    """(Re)write golden fixtures; returns the paths written."""
+    base = base or GOLDEN_DIR
+    base.mkdir(parents=True, exist_ok=True)
+    written = []
+    for space in GOLDEN_SPACES:
+        for arch in GOLDEN_ARCHS:
+            if only is not None and (space, arch) != only:
+                continue
+            doc = compute_doc(space, arch)
+            path = golden_path(space, arch, base)
+            path.write_text(json.dumps(
+                {"fingerprint": fingerprint(doc), "doc": doc},
+                indent=2, sort_keys=True) + "\n")
+            written.append(path)
+    return written

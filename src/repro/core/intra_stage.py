@@ -124,7 +124,8 @@ def tune_stage(cfg: ArchConfig, *, seq_len: int, layers: int, n_devices: int,
                max_front: int = 16,
                scm: Optional[StageCostModel] = None,
                refine: bool = True,
-               engine: str = "compiled") -> IntraStageResult:
+               engine: str = "compiled",
+               backend: Optional[str] = None) -> IntraStageResult:
     """Batched sweep -> feasible set -> Pareto frontier -> ratio refinement.
 
     engine="compiled" (default) runs the struct-of-arrays grid through the
@@ -133,6 +134,11 @@ def tune_stage(cfg: ArchConfig, *, seq_len: int, layers: int, n_devices: int,
     engine="legacy" is the pre-compilation path (per-object candidate list,
     recursive expression walks, Python Pareto scan) kept as the equivalence
     and speedup baseline — both must return identical frontiers.
+
+    ``backend`` selects the tape evaluation backend ("numpy"|"jax"|"auto",
+    see StageCostModel) when this call constructs the cost model; a
+    caller-supplied ``scm`` brings its own backend and wins.  Every
+    backend returns identical frontiers (tests/test_tape_backends.py).
     """
     if ckpt_granularity <= 0:
         ckpt_granularity = max(1, layers // 8)
@@ -158,7 +164,8 @@ def tune_stage(cfg: ArchConfig, *, seq_len: int, layers: int, n_devices: int,
     if not len(grid):
         return res
     scm = scm or StageCostModel(cfg, seq_len, hw=hw, cp=cp,
-                                has_embed=has_embed, has_head=has_head)
+                                has_embed=has_embed, has_head=has_head,
+                                backend=backend or "numpy")
     # memory feasibility (Eq. 4) on the full grid first; runtime + the
     # interference model run only on the feasible survivors
     mem = scm.evaluate_memory(grid.env(layers=layers, grad_accum=grad_accum,
@@ -203,7 +210,8 @@ def tune_stage_multi_g(cfg: ArchConfig, *, seq_len: int, layers: int,
                        max_front: int = 16,
                        scm: Optional[StageCostModel] = None,
                        refine: bool = True,
-                       cached: bool = True
+                       cached: bool = True,
+                       backend: Optional[str] = None
                        ) -> Dict[int, "IntraStageResult"]:
     """G-collapsed `tune_stage`: sweep one stage hypothesis for ALL grad
     accumulation choices in a single pass (ROADMAP "collapse the G loop").
@@ -221,12 +229,19 @@ def tune_stage_multi_g(cfg: ArchConfig, *, seq_len: int, layers: int,
     ``cached=True`` additionally consults the cost model's knob-tuple
     result cache, which collapses repeated identical sub-sweeps (e.g. the
     same-role middle stages of a deep pipeline differ only in ``inflight``,
-    which the time tape never reads).
+    which the time tape never reads).  The cache is backend-agnostic: the
+    jax backend's exact mode is bitwise identical to numpy, so cached
+    rows are interchangeable regardless of which backend produced them.
+
+    ``backend`` selects the tape backend when this call constructs the
+    cost model (a caller-supplied ``scm`` brings its own); the memory
+    union pass and the per-G runtime passes all run through it.
     """
     if ckpt_granularity <= 0:
         ckpt_granularity = max(1, layers // 8)
     scm = scm or StageCostModel(cfg, seq_len, hw=hw, cp=cp,
-                                has_embed=has_embed, has_head=has_head)
+                                has_embed=has_embed, has_head=has_head,
+                                backend=backend or "numpy")
     grids = {}
     results: Dict[int, IntraStageResult] = {}
     for G in grad_accums:

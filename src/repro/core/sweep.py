@@ -259,7 +259,15 @@ atexit.register(shutdown_pool)
 
 
 def _pool_task(payload: bytes):
+    import dataclasses
     spec, knobs, plan, unit_idxs = pickle.loads(payload)
+    # Forked workers always sweep on the numpy tape backend: calling into
+    # an XLA runtime whose client the parent initialized before the fork
+    # can deadlock (see _start_method), and every backend returns
+    # bitwise-identical frontiers anyway (tests/test_tape_backends.py),
+    # so the substitution is invisible in the merged memo.  Normalizing
+    # the spec also lets jax/numpy spec variants share one worker tuner.
+    spec = dataclasses.replace(spec, backend="numpy")
     key = pickle.dumps((spec, knobs))
     if _WORKER_TUNER["key"] != key:
         from repro.core.tuner import MistTuner

@@ -11,7 +11,7 @@ overloading and numpy broadcasting so every symbol may be bound to an array
 of candidate values.  ``sympy`` is deliberately avoided in the hot path (too
 slow at ~1e6-point batched substitution).
 
-Two evaluation paths exist:
+Three evaluation paths exist:
 
   * ``Expr.evaluate`` — the reference recursive walk with an id-keyed memo
     (kept for tests and as the legacy baseline in benchmarks).
@@ -22,6 +22,17 @@ Two evaluation paths exist:
     automatically and each unique node is computed exactly once.  Slots are
     reused once a value's last consumer has run, keeping the working set of
     live candidate-batch arrays small.
+  * ``Tape.lower_jax`` — lowers the same instruction list to jax
+    (``repro.compat`` gates availability, so numpy-only environments
+    degrade cleanly).  Two flavors: the default *exact* mode executes the
+    instructions as individual jax ops, which is bitwise identical to the
+    numpy tape under ``jax_enable_x64`` (asserted by the differential
+    suite in tests/test_tape_backends.py); ``fused=True`` compiles the
+    whole tape into ONE ``jax.jit`` program — the fastest path on
+    accelerators, but on CPU LLVM contracts mul+add chains into FMAs,
+    which perturbs results by ~1-2 ulp (measured; documented in
+    docs/tuning-engine.md), so it is opt-in and never used where the
+    plan-identity guarantee matters.
 """
 from __future__ import annotations
 
@@ -84,6 +95,14 @@ class Expr:
     def __call__(self, **env):
         return self.evaluate(env)
 
+    # Hash-consed nodes are constructed through ``__new__``-level intern
+    # caches and carry ``__slots__``, so the default pickle protocol (which
+    # calls ``__new__`` with no arguments) fails AND would break interning
+    # on load.  Each concrete class defines ``__reduce__`` to re-enter its
+    # constructor, so ``pickle.loads(pickle.dumps(e)) is e`` holds within a
+    # process and spawn-based worker pools receive properly re-interned
+    # DAGs (children unpickle first, so the op-cache keys match).
+
 
 # ---------------------------------------------------------------------------
 # Hash-consing: structurally identical nodes are the same object, so shared
@@ -133,6 +152,9 @@ class Const(Expr):
     def __init__(self, v: Number):
         pass                            # set in __new__
 
+    def __reduce__(self):
+        return (Const, (self.v,))
+
     def evaluate(self, env, memo=None):
         return self.v
 
@@ -153,6 +175,9 @@ class Sym(Expr):
 
     def __init__(self, name: str):
         pass                            # set in __new__
+
+    def __reduce__(self):
+        return (Sym, (self.name,))
 
     def evaluate(self, env, memo=None):
         try:
@@ -180,6 +205,44 @@ _UN_FNS: Dict[str, Callable] = {
     "abs": np.abs,
 }
 
+# reverse fn-identity -> op-name map (instructions store the bound numpy
+# callable for the hot loop; backends that need the *semantic* op — the
+# jax lowering — recover the name through this)
+_FN_NAMES: Dict[int, str] = {id(f): n
+                             for d in (_BIN_FNS, _UN_FNS)
+                             for n, f in d.items()}
+
+# Ops whose numpy and jax implementations are the same IEEE-754
+# correctly-rounded operation, so per-op (exact-mode) jax execution is
+# bitwise identical to numpy under x64.  ``pow`` and ``log2`` are NOT:
+# libm and XLA approximate them differently (measured last-ulp drift on
+# CPU), so a tape containing them cannot claim the bitwise guarantee —
+# ``Tape.jax_bitexact`` reports this and the cost-model backend refuses
+# jax for such tapes rather than serving subtly different results.
+BITEXACT_OPS = frozenset(
+    {"add", "sub", "mul", "div", "max", "min",
+     "ge", "le", "gt", "lt", "ceil", "floor", "sqrt", "abs"})
+
+
+def _jax_fn_tables(jnp):
+    """jax twins of ``_BIN_FNS`` / ``_UN_FNS``.
+
+    Comparisons cast to ``jnp.result_type(float)`` (f64 under x64, f32
+    otherwise) instead of hard-coding float64, so the lowering also works
+    — at reduced precision — when the caller has not enabled x64."""
+    def cmp(op):
+        def f(a, b):
+            return op(a, b).astype(jnp.result_type(float))
+        return f
+    jbin = {"add": jnp.add, "sub": jnp.subtract, "mul": jnp.multiply,
+            "div": jnp.divide, "pow": jnp.power,
+            "max": jnp.maximum, "min": jnp.minimum,
+            "ge": cmp(jnp.greater_equal), "le": cmp(jnp.less_equal),
+            "gt": cmp(jnp.greater), "lt": cmp(jnp.less)}
+    jun = {"ceil": jnp.ceil, "floor": jnp.floor, "sqrt": jnp.sqrt,
+           "log2": jnp.log2, "abs": jnp.abs}
+    return jbin, jun
+
 
 class BinOp(Expr):
     __slots__ = ("op", "a", "b")
@@ -195,6 +258,9 @@ class BinOp(Expr):
 
     def __init__(self, op: str, a: Expr, b: Expr):
         pass                            # set in __new__
+
+    def __reduce__(self):
+        return (BinOp, (self.op, self.a, self.b))
 
     def evaluate(self, env, memo=None):
         memo = {} if memo is None else memo
@@ -224,6 +290,9 @@ class UnOp(Expr):
 
     def __init__(self, op: str, a: Expr):
         pass                            # set in __new__
+
+    def __reduce__(self):
+        return (UnOp, (self.op, self.a))
 
     def evaluate(self, env, memo=None):
         memo = {} if memo is None else memo
@@ -328,7 +397,8 @@ class Tape:
     """
 
     __slots__ = ("instrs", "n_slots", "sym_loads", "const_loads",
-                 "out_slots", "_reusable")
+                 "out_slots", "ops", "jax_bitexact", "_reusable",
+                 "_jax_cache")
 
     def __init__(self, instrs, n_slots, sym_loads, const_loads, out_slots):
         self.instrs = instrs            # [(fn, dst, a, b)]; b < 0 => unary
@@ -336,6 +406,13 @@ class Tape:
         self.sym_loads = sym_loads      # [(name, slot)]
         self.const_loads = const_loads  # [(slot, value)]
         self.out_slots = out_slots      # {name: slot}
+        self.ops = [_FN_NAMES[id(fn)] for fn, _, _, _ in instrs]
+        # whether every instruction is correctly rounded in both numpy and
+        # jax (BITEXACT_OPS), i.e. whether exact-mode jax execution under
+        # x64 is bitwise identical to run(); False for pow/log2 tapes.
+        # Precomputed: the backend dispatcher consults it per tape run.
+        self.jax_bitexact = all(op in BITEXACT_OPS for op in self.ops)
+        self._jax_cache: Dict[bool, Callable] = {}
         # instructions whose result may be buffer-reused: real ufuncs (the
         # comparison lambdas aren't) writing a non-output slot at this
         # program point (output values escape run() and must stay fresh).
@@ -355,6 +432,71 @@ class Tape:
 
     def make_scratch(self) -> TapeScratch:
         return TapeScratch(self)
+
+    # -- jax lowering -------------------------------------------------------
+    def lower_jax(self, *, fused: bool = False) -> Callable:
+        """Lower the instruction list to jax; returns ``f(env) -> outputs``.
+
+        ``fused=False`` (default, *exact* mode): the instructions execute
+        as individual jax ops on device arrays.  For tapes whose ops are
+        all correctly rounded (``jax_bitexact``; everything but
+        ``pow``/``log2``), outputs under ``jax_enable_x64`` are bitwise
+        identical to ``Tape.run`` — this is the mode the cost-model
+        backend uses, because the tuner's plan-identity guarantee rests
+        on it.
+
+        ``fused=True``: the whole tape is compiled into ONE ``jax.jit``
+        program evaluating every output in a single fused pass.  Fastest
+        on accelerators (and free of per-op dispatch overhead), but on
+        CPU LLVM contracts mul+add chains into FMAs, perturbing results
+        by ~1-2 ulp, and each new batch shape retraces — use it where
+        throughput beats last-ulp reproducibility.
+
+        The compiled callable is cached per mode on the tape.  Output
+        values are jax arrays (or numpy scalars for constant outputs);
+        ``np.asarray`` them to re-enter numpy code.  Raises ImportError
+        when jax is unavailable (``repro.compat.has_jax`` to probe).
+        """
+        fn = self._jax_cache.get(fused)
+        if fn is None:
+            fn = self._build_jax(fused)
+            self._jax_cache[fused] = fn
+        return fn
+
+    def _build_jax(self, fused: bool) -> Callable:
+        from repro.compat import require_jax
+        jax, jnp = require_jax()
+        jbin, jun = _jax_fn_tables(jnp)
+        jinstrs = [(jun[op] if b < 0 else jbin[op], dst, a, b)
+                   for op, (_, dst, a, b) in zip(self.ops, self.instrs)]
+        consts = [(slot, np.float64(v)) for slot, v in self.const_loads]
+        sym_loads, out_slots = self.sym_loads, self.out_slots
+        n_slots = self.n_slots
+
+        def _eval(args):
+            slots: List[Any] = [None] * n_slots
+            for slot, v in consts:
+                slots[slot] = v
+            for (_, slot), v in zip(sym_loads, args):
+                slots[slot] = v
+            for f, dst, a, b in jinstrs:
+                slots[dst] = f(slots[a]) if b < 0 else f(slots[a], slots[b])
+            return {name: slots[slot] for name, slot in out_slots.items()}
+
+        body = jax.jit(_eval) if fused else _eval
+
+        def run(env: Mapping[str, Any]) -> Dict[str, Any]:
+            args = []
+            for name, _slot in sym_loads:
+                try:
+                    v = env[name]
+                except KeyError:
+                    raise KeyError(f"unbound symbol {name!r}; "
+                                   f"have {sorted(env)}") from None
+                args.append(jnp.asarray(v))
+            return body(tuple(args))
+
+        return run
 
     def run(self, env: Mapping[str, Any],
             scratch: "TapeScratch" = None) -> Dict[str, Any]:

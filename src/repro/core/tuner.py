@@ -31,7 +31,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.core.costmodel import CostParams, StageCostModel
+from repro.core.costmodel import BACKENDS, CostParams, StageCostModel
 from repro.core.hardware import V5E, HardwareSpec
 from repro.core.inter_stage import (InterStageSolution, StageCand,
                                     pipeline_objective, solve_milp)
@@ -59,6 +59,15 @@ class TuneSpec:
     # frontier memoization.  "legacy": the pre-compilation interpreted path,
     # kept as the equivalence/speedup baseline (identical results).
     engine: str = "compiled"
+    # tape evaluation backend ("numpy" | "jax" | "auto", see
+    # StageCostModel): "jax" runs the compiled tapes on device arrays,
+    # bitwise identical to numpy — enforced structurally: jax executes
+    # only under jax_enable_x64 and only for correctly-rounded tapes,
+    # degrading to numpy otherwise (or where jax is absent).  "auto"
+    # additionally switches per tape run on grid size.  The selected
+    # plan is therefore identical for every value (asserted in
+    # tests/test_tape_backends.py).
+    backend: str = "numpy"
     # (S, G) sweep execution (core/sweep.py; docs/architecture.md):
     #   0   plain in-loop sweeps (the PR-1 serial compiled engine, kept as
     #       the speedup baseline),
@@ -115,6 +124,9 @@ def _space_knobs(space: str, layers: int) -> Dict:
 class MistTuner:
     def __init__(self, spec: TuneSpec, *, hw: HardwareSpec = V5E,
                  cp: CostParams = CostParams()):
+        if spec.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {spec.backend!r}; "
+                             f"have {BACKENDS}")
         self.spec, self.hw, self.cp = spec, hw, cp
         self._scm_cache: Dict[Tuple[bool, bool], StageCostModel] = {}
         # cross-(S, G) frontier memo: identical stage hypotheses (same
@@ -130,7 +142,8 @@ class MistTuner:
         if key not in self._scm_cache:
             self._scm_cache[key] = StageCostModel(
                 self.spec.arch, self.spec.seq_len, hw=self.hw, cp=self.cp,
-                has_embed=has_embed, has_head=has_head)
+                has_embed=has_embed, has_head=has_head,
+                backend=self.spec.backend)
         return self._scm_cache[key]
 
     def stage_counts(self) -> List[int]:

@@ -1,0 +1,64 @@
+"""Golden-plan regression: the tuner's selected plan + objective for every
+search-space preset x model config is pinned under tests/golden/.
+
+A failure here means the tuning result CHANGED — cost model, schedule
+template, Pareto selection, MILP, or search-space drift.  If the change is
+intentional, regenerate and commit the fixtures:
+
+    PYTHONPATH=src python tools/regen_golden.py
+
+The failure message is a field-level diff against the fixture, so the
+shape of the drift (objective only? a knob? the whole plan?) is visible
+without re-running anything.
+"""
+import json
+
+import pytest
+
+from repro.core import golden
+
+CASES = [(s, a) for s in golden.GOLDEN_SPACES for a in golden.GOLDEN_ARCHS]
+
+
+@pytest.mark.parametrize("space,arch", CASES,
+                         ids=[f"{s}-{a}" for s, a in CASES])
+def test_plan_matches_golden(space, arch):
+    path = golden.golden_path(space, arch)
+    assert path.exists(), (
+        f"missing golden fixture {path.name}; generate it with "
+        f"`PYTHONPATH=src python tools/regen_golden.py`")
+    want = json.loads(path.read_text())
+    doc = golden.compute_doc(space, arch)
+    if golden.fingerprint(doc) == want["fingerprint"]:
+        return
+    diff = golden.diff_docs(want["doc"], doc)
+    lines = "\n  ".join(diff or ["<fingerprint mismatch but no field "
+                                 "diff — fixture file corrupted?>"])
+    pytest.fail(
+        f"tuned plan drifted from golden fixture {path.name} "
+        f"(golden != current):\n  {lines}\nIf this change is intentional, "
+        f"regenerate with `PYTHONPATH=src python tools/regen_golden.py` "
+        f"and commit the updated fixtures.")
+
+
+def test_fixture_fingerprints_self_consistent():
+    """Each checked-in fixture's fingerprint matches its own document —
+    catches hand-edited fixtures independently of any tuning run."""
+    n = 0
+    for space, arch in CASES:
+        path = golden.golden_path(space, arch)
+        if not path.exists():
+            continue
+        data = json.loads(path.read_text())
+        assert golden.fingerprint(data["doc"]) == data["fingerprint"], \
+            f"{path.name}: fingerprint does not match its own doc"
+        n += 1
+    assert n, "no golden fixtures found"
+
+
+def test_diff_docs_reports_field_paths():
+    a = {"plan": {"stages": [{"tp": 2, "ao": 0.5}]}, "objective": "1.0"}
+    b = {"plan": {"stages": [{"tp": 4, "ao": 0.5}]}, "objective": "1.1"}
+    diff = golden.diff_docs(a, b)
+    assert any("plan.stages[0].tp: 2 != 4" in d for d in diff)
+    assert any("objective" in d for d in diff)

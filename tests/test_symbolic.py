@@ -1,4 +1,7 @@
 """Symbolic expression engine: correctness + batched-broadcast semantics."""
+import math
+import pickle
+
 import numpy as np
 import pytest
 
@@ -60,6 +63,60 @@ def test_memo_shared_subexpression():
     sub = x * x
     e = sub + sub
     assert e(x=3.0) == 18.0
+
+
+# -- pickling re-interns through the constructors -----------------------------
+# Hash-consed nodes use __new__-level caches + __slots__, which the default
+# pickle protocol cannot reconstruct; __reduce__ re-enters the constructors
+# so round-trips preserve interned identity (the property spawn-based
+# worker pools and the multi-host sweep rely on).
+
+
+def test_pickle_round_trip_is_identity():
+    x, y = Sym("x"), Sym("y")
+    exprs = [
+        Const(2.5),
+        x,
+        x + 1,                                   # the ISSUE's repro case
+        smax(x * y, 3.0) + ceil_div(x, 2.0),
+        where(x > y, x - y, y - x),
+    ]
+    for e in exprs:
+        r = pickle.loads(pickle.dumps(e))
+        assert r is e, f"round-trip broke interning for {e!r}"
+
+
+def test_pickle_existing_nodes_add_no_intern_entries():
+    x = Sym("x")
+    e = (x + 1) * smin(x, 7.0)
+    before = S.intern_cache_stats()
+    out = pickle.loads(pickle.dumps(e))
+    assert out is e
+    assert S.intern_cache_stats() == before
+
+
+def test_pickle_shared_subdag_stays_shared():
+    x = Sym("x")
+    sub = (x + 1.0) * (x + 2.0)
+    pair = (sub + 3.0, sub * 4.0)
+    a, b = pickle.loads(pickle.dumps(pair))
+    assert a is pair[0] and b is pair[1]
+    assert a.a is b.a                            # the shared sub-DAG node
+
+
+def test_pickle_nan_const_round_trips_without_interning():
+    e = Const(float("nan"))
+    r = pickle.loads(pickle.dumps(e))
+    assert isinstance(r, Const) and math.isnan(r.v)
+    assert r is not e                            # NaN is never interned
+
+
+def test_pickle_evaluates_identically():
+    x, y = Sym("x"), Sym("y")
+    e = where(x > y, x / y, y / x) + smax(x, y)
+    r = pickle.loads(pickle.dumps(e))
+    xs = np.linspace(0.5, 4.0, 17)
+    np.testing.assert_array_equal(e(x=xs, y=2.0), r(x=xs, y=2.0))
 
 
 # -- hypothesis: random expression trees evaluate like direct numpy ----------

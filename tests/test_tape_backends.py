@@ -1,0 +1,302 @@
+"""Differential + equivalence suite for the tape evaluation backends.
+
+Three executors exist for a compiled ``Tape``: the numpy instruction loop
+(with and without ``out=`` scratch reuse), and the jax lowering
+(``Tape.lower_jax``) in exact mode — the ``StageCostModel(backend="jax")``
+path.  Under ``jax_enable_x64`` all of them must be **bitwise identical**
+to the reference recursive ``Expr.evaluate`` walk, which is what lets the
+tuner hand any backend's results to the same Pareto/MILP pipeline and
+still guarantee identical plans.  The fused ``jax.jit`` mode is exempt
+from bitwise (CPU FMA contraction, ~1-2 ulp) and asserted close instead.
+
+Everything jax-dependent skips cleanly when jax is missing or cannot
+produce 64-bit floats.
+"""
+import contextlib
+
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.configs.base import ShapeConfig, get_arch
+from repro.core import symbolic as S
+from repro.core.costmodel import StageCostModel
+from repro.core.intra_stage import tune_stage
+from repro.core.schedule import candidate_grid
+from repro.core.symbolic import (Const, Sym, ceil, compile_tape, smax, smin,
+                                 where)
+from repro.core.tuner import SPACES, MistTuner, TuneSpec, tune
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # property tests skip; example tests still run
+    HAVE_HYPOTHESIS = False
+
+ARCH = "granite-3-8b"
+SHAPE = ShapeConfig("t", 2048, 16, "train")
+SMALL = dict(stage_counts=(1, 2), grad_accums=(2, 4))
+
+
+@contextlib.contextmanager
+def x64_or_skip():
+    """Enter 64-bit jax mode, or skip the test when that is impossible."""
+    if not compat.has_jax():
+        pytest.skip("jax unavailable; numpy backend only")
+    with compat.enable_x64():
+        if not compat.jax_x64_enabled():
+            pytest.skip("this jax cannot produce 64-bit floats")
+        yield
+
+
+def _all_equal(ref, outs, err=""):
+    for k in ref:
+        np.testing.assert_array_equal(
+            np.broadcast_to(ref[k], np.shape(outs[k])), np.asarray(outs[k]),
+            err_msg=f"{err}{k}")
+
+
+# -- differential: naive walk vs numpy tape vs scratch vs jax -----------------
+
+
+def _mixed_dag():
+    x, y = Sym("x"), Sym("y")
+    e1 = smin(x / y, ceil(x) * 2.0) + where(x > y, x - y, y - x)
+    e2 = (x / y) * (x / y) + e1 + smax(x, 3.0) - S.UnOp("abs", x - 2.0)
+    return {"e1": e1, "e2": e2}
+
+
+@pytest.mark.parametrize("env", [
+    {"x": 4.0, "y": 2.0},                                   # scalar
+    {"x": np.linspace(0.1, 9.0, 997), "y": 2.0},            # batched+scalar
+    {"x": np.linspace(0.1, 9.0, 64),
+     "y": np.linspace(1.0, 3.0, 64)},                       # batched
+], ids=["scalar", "mixed", "batched"])
+def test_differential_mixed_dag(env):
+    outs = _mixed_dag()
+    tape = compile_tape(outs)
+    memo = {}
+    ref = {k: e.evaluate(env, memo) for k, e in outs.items()}
+    _all_equal(ref, tape.run(env), "tape:")
+    sc = tape.make_scratch()
+    tape.run(env, sc)
+    _all_equal(ref, tape.run(env, sc), "scratch:")
+    with x64_or_skip():
+        _all_equal(ref, tape.lower_jax()(env), "jax-exact:")
+        fused = tape.lower_jax(fused=True)(env)
+        for k in ref:
+            # fused is exempt from bitwise: CPU FMA contraction (plus
+            # cancellation amplification) perturbs the last few ulps
+            np.testing.assert_allclose(np.asarray(fused[k]), ref[k],
+                                       rtol=1e-9, atol=1e-12,
+                                       err_msg=f"jax-fused:{k}")
+
+
+def test_jax_missing_symbol_raises_keyerror():
+    with x64_or_skip():
+        tape = compile_tape({"o": Sym("x") + Sym("y")})
+        with pytest.raises(KeyError, match="unbound symbol"):
+            tape.lower_jax()({"x": 1.0})
+
+
+if HAVE_HYPOTHESIS:
+    _leaf = st.one_of(
+        st.floats(min_value=0.1, max_value=10.0).map(Const),
+        st.sampled_from(["x", "y", "z"]).map(Sym),
+    )
+
+    def _tree(depth):
+        if depth == 0:
+            return _leaf
+        sub = _tree(depth - 1)
+        return st.one_of(
+            _leaf,
+            st.tuples(st.sampled_from(["+", "-", "*", "/", "^", "v", "<"]),
+                      sub, sub),
+            st.tuples(st.sampled_from(["ceil", "floor", "abs", "sqrt"]),
+                      sub),
+        )
+
+    def _build(t):
+        if isinstance(t, S.Expr):
+            return t
+        if len(t) == 2:
+            if t[0] == "sqrt":          # domain-safe: sqrt of |.|
+                return S.UnOp("sqrt", S.UnOp("abs", _build(t[1])))
+            return S.UnOp(t[0], _build(t[1]))
+        op, a, b = t
+        a, b = _build(a), _build(b)
+        return {"+": a + b, "-": a - b, "*": a * b, "/": a / b,
+                "^": smax(a, b), "v": smin(a, b),
+                "<": where(a < b, a, b)}[op]
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(_tree(4), min_size=1, max_size=4),
+           st.lists(st.floats(0.1, 5.0), min_size=4, max_size=4))
+    def test_random_dags_equal_across_backends(trees, vals):
+        outs = {f"o{i}": _build(t) for i, t in enumerate(trees)}
+        tape = compile_tape(outs)
+        for env in ({"x": np.asarray(vals), "y": 2.0, "z": 0.7},
+                    {"x": float(vals[0]), "y": float(vals[1]),
+                     "z": float(vals[2])}):
+            memo = {}
+            ref = {k: e.evaluate(env, memo) for k, e in outs.items()}
+            _all_equal(ref, tape.run(env), "tape:")
+            sc = tape.make_scratch()
+            tape.run(env, sc)
+            _all_equal(ref, tape.run(env, sc), "scratch:")
+            with x64_or_skip():
+                _all_equal(ref, tape.lower_jax()(env), "jax:")
+else:
+    def test_property_tests_need_hypothesis():
+        pytest.importorskip("hypothesis")
+
+
+# -- StageCostModel backend dispatch ------------------------------------------
+
+
+def _grid_env(cfg):
+    grid = candidate_grid(cfg, n_devices=8, layers=16, global_batch=16,
+                          grad_accum=2)
+    return grid.env(layers=16, grad_accum=2, inflight=2.0)
+
+
+def test_costmodel_jax_backend_bitwise_equals_numpy():
+    cfg = get_arch(ARCH)
+    a = StageCostModel(cfg, 2048)
+    b = StageCostModel(cfg, 2048, backend="jax")
+    env = _grid_env(cfg)
+    with x64_or_skip():
+        ra, rb = a.evaluate(env), b.evaluate(env)
+        assert b.last_backend == "jax"
+        for k in ("mem_fwd", "mem_bwd", "mem_peak", "t_stable", "d_delta",
+                  "t_step", "t_first", "t_last"):
+            np.testing.assert_array_equal(ra[k], rb[k], err_msg=k)
+        for k in ra["items"]:
+            np.testing.assert_array_equal(ra["items"][k], rb["items"][k],
+                                          err_msg=k)
+        ma, mb = a.evaluate_memory(env), b.evaluate_memory(env)
+        np.testing.assert_array_equal(ma["mem_peak"], mb["mem_peak"])
+        ta, tb = a.evaluate_times(env), b.evaluate_times(env)
+        np.testing.assert_array_equal(ta["t_stable"], tb["t_stable"])
+        np.testing.assert_array_equal(ta["d_delta"], tb["d_delta"])
+
+
+def test_auto_backend_thresholds_on_grid_size():
+    cfg = get_arch(ARCH)
+    scm = StageCostModel(cfg, 2048, backend="auto")
+    env = _grid_env(cfg)
+    with x64_or_skip():
+        scm.jax_auto_threshold = 10**9          # far above this grid
+        scm.evaluate_memory(env)
+        assert scm.last_backend == "numpy"
+        scm.jax_auto_threshold = 1
+        scm.evaluate_memory(env)
+        assert scm.last_backend == "jax"
+
+
+@pytest.mark.parametrize("backend", ["jax", "auto"])
+def test_jax_backends_require_x64(backend):
+    """Without x64, jax would evaluate in float32 and drift from numpy —
+    voiding the identical-plan guarantee and poisoning the
+    backend-interchangeable knob-tuple cache — so BOTH jax-capable
+    backends must refuse jax and stay on numpy, whatever the grid size."""
+    if not compat.has_jax():
+        pytest.skip("jax unavailable")
+    if compat.jax_x64_enabled():
+        pytest.skip("x64 globally enabled; the refusal path is unreachable")
+    cfg = get_arch(ARCH)
+    scm = StageCostModel(cfg, 2048, backend=backend)
+    scm.jax_auto_threshold = 1
+    scm.evaluate_memory(_grid_env(cfg))
+    assert scm.last_backend == "numpy"
+
+
+def test_jax_backend_refuses_non_bitexact_tapes():
+    """pow/log2 are not correctly rounded identically by libm and XLA
+    (measured), so a tape containing them must report jax_bitexact=False
+    and the backend dispatcher must refuse jax for it."""
+    x = Sym("x")
+    safe = compile_tape({"o": ceil(x) / 2.0 + smax(x, 1.0)})
+    assert safe.jax_bitexact
+    risky = compile_tape({"o": x ** Sym("y") + S.UnOp("log2", x)})
+    assert not risky.jax_bitexact
+    with x64_or_skip():
+        # the lowering itself still works, just without the bitwise claim
+        env = {"x": np.linspace(1.0, 4.0, 11), "y": np.full(11, 1.5)}
+        np.testing.assert_allclose(np.asarray(risky.lower_jax()(env)["o"]),
+                                   risky.run(env)["o"], rtol=1e-12)
+        cfg = get_arch(ARCH)
+        scm = StageCostModel(cfg, 2048, backend="jax")
+        e = {k: np.asarray(v, np.float64)
+             for k, v in env.items()}
+        assert scm._use_jax(safe, e)
+        assert not scm._use_jax(risky, e)
+
+
+def test_jax_backend_degrades_without_jax(monkeypatch):
+    cfg = get_arch(ARCH)
+    scm = StageCostModel(cfg, 2048, backend="jax")
+    monkeypatch.setattr(compat, "has_jax", lambda: False)
+    r = scm.evaluate_memory(_grid_env(cfg))
+    assert scm.last_backend == "numpy"
+    ref = StageCostModel(cfg, 2048).evaluate_memory(_grid_env(cfg))
+    np.testing.assert_array_equal(r["mem_peak"], ref["mem_peak"])
+
+
+def test_unknown_backend_rejected():
+    cfg = get_arch(ARCH)
+    with pytest.raises(ValueError, match="backend"):
+        StageCostModel(cfg, 2048, backend="cuda")
+    with pytest.raises(ValueError, match="backend"):
+        MistTuner(TuneSpec(arch=cfg, seq_len=2048, global_batch=16,
+                           n_devices=8, backend="cuda"))
+
+
+# -- frontier / plan equivalence ----------------------------------------------
+
+
+def _front_key(res):
+    return (res.n_evaluated, res.n_feasible,
+            [(p.t, p.d, p.mem, p.cand) for p in res.frontier])
+
+
+def test_tune_stage_frontier_byte_identical_across_backends():
+    cfg = get_arch(ARCH)
+    kw = dict(seq_len=2048, layers=20, n_devices=8,
+              global_batch_per_stage=16, grad_accum=2, inflight=2.0)
+    ref = tune_stage(cfg, **kw)
+    with x64_or_skip():
+        jx = tune_stage(cfg, backend="jax", **kw)
+        au = tune_stage(cfg, backend="auto", **kw)
+    assert _front_key(jx) == _front_key(ref)
+    assert _front_key(au) == _front_key(ref)
+
+
+def _report_key(rep):
+    return (rep.objective, rep.plan, rep.best_S, rep.best_G,
+            tuple(rep.per_sg), rep.n_milp)
+
+
+@pytest.mark.parametrize("space", SPACES)
+def test_plans_identical_across_backends_all_spaces(space):
+    cfg = get_arch(ARCH)
+    ref = tune(cfg, SHAPE, 8, space=space, **SMALL)
+    with x64_or_skip():
+        jx = tune(cfg, SHAPE, 8, space=space, backend="jax", **SMALL)
+        au = tune(cfg, SHAPE, 8, space=space, backend="auto", **SMALL)
+    assert _report_key(jx) == _report_key(ref)
+    assert _report_key(au) == _report_key(ref)
+
+
+@pytest.mark.parametrize("workers", [0, 1, 4])
+def test_jax_backend_plans_identical_across_worker_counts(workers):
+    """The sweep executor must be backend-invisible too: forked workers
+    deliberately sweep on numpy (forking a live XLA runtime is unsafe),
+    which the bitwise guarantee makes indistinguishable."""
+    cfg = get_arch(ARCH)
+    ref = tune(cfg, SHAPE, 8, space="mist", workers=0, **SMALL)
+    with x64_or_skip():
+        rep = tune(cfg, SHAPE, 8, space="mist", backend="jax",
+                   workers=workers, **SMALL)
+    assert _report_key(rep) == _report_key(ref)

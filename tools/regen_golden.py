@@ -1,0 +1,43 @@
+#!/usr/bin/env python
+"""Regenerate the golden-plan regression fixtures under tests/golden/.
+
+Run after an INTENTIONAL change to the cost model / schedule / tuner and
+commit the rewritten fixtures together with that change:
+
+    PYTHONPATH=src python tools/regen_golden.py            # all cells
+    PYTHONPATH=src python tools/regen_golden.py --only mist:granite-3-8b
+
+``tests/test_golden_plans.py`` fails with a field-level diff whenever a
+recomputed plan drifts from these fixtures.
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import golden  # noqa: E402
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", metavar="SPACE:ARCH",
+                    help="regenerate a single cell, e.g. mist:granite-3-8b")
+    args = ap.parse_args()
+    only = None
+    if args.only:
+        space, _, arch = args.only.partition(":")
+        if space not in golden.GOLDEN_SPACES or arch not in golden.GOLDEN_ARCHS:
+            ap.error(f"unknown cell {args.only!r}; spaces="
+                     f"{golden.GOLDEN_SPACES} archs={golden.GOLDEN_ARCHS}")
+        only = (space, arch)
+    written = golden.regen(only=only)
+    for p in written:
+        print(f"wrote {p.relative_to(Path.cwd())}"
+              if p.is_relative_to(Path.cwd()) else f"wrote {p}")
+    print(f"{len(written)} fixture(s) regenerated")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
