@@ -25,6 +25,13 @@ not bitwise).  On accelerators the fused path is the headline; on a
 small CPU host expect parity-or-overhead below the `auto` threshold —
 which is exactly why `auto` thresholds on grid size.
 
+A fifth measurement (`run_memory_agreement`) closes the tuner->runtime
+loop: for every feasible golden-plan config, the symbolic memory
+prediction that selected the plan vs the spec-walked bytes of its
+lowering (`repro.lowering`), asserted within `MEMORY_REL_TOL`.  The
+--json document carries the full per-config comparison as the
+`predicted_vs_lowered_memory` table (uploaded as a CI artifact).
+
 Run with --smoke for a CI-sized invocation; --json PATH additionally
 writes the emitted rows as a JSON document (uploaded as a CI artifact).
 """
@@ -226,6 +233,66 @@ def run_backend_speedup(size: str = "6.7b", rows: int = 1_000_000,
     return out
 
 
+def memory_agreement_table() -> List[dict]:
+    """Predicted-vs-lowered memory agreement per golden-plan config: the
+    symbolic estimate that selected each plan vs the spec-walked bytes of
+    its lowering (`repro.lowering.memory_consistency`).  Infeasible golden
+    cells (no plan pinned) emit a skip entry; numpy-only containers (no
+    jax → no PartitionSpec tables) skip the whole table."""
+    from repro import compat
+    if not compat.has_jax():
+        return [{"skipped": "jax_unavailable"}]
+    from repro.configs.base import ShapeConfig, get_arch
+    from repro.core import golden
+    from repro.core.plan import Plan
+    from repro.lowering import MEMORY_REL_TOL, memory_consistency
+
+    w = golden._WORKLOAD
+    shape = ShapeConfig("golden", w["seq_len"], w["global_batch"], "train")
+    table = []
+    for space in golden.GOLDEN_SPACES:
+        for arch in golden.GOLDEN_ARCHS:
+            path = golden.golden_path(space, arch)
+            if not path.exists():
+                continue
+            doc = json.loads(path.read_text())["doc"]
+            row = {"space": space, "arch": arch}
+            if doc["plan"] is None:
+                table.append({**row, "skipped": "infeasible"})
+                continue
+            plan = Plan.from_json(json.dumps(doc["plan"]))
+            mc = memory_consistency(get_arch(arch), shape, plan)
+            table.append({
+                **row,
+                "predicted_bytes": mc["predicted_bytes"],
+                "lowered_bytes": mc["lowered_bytes"],
+                "rel_error": mc["rel_error"],
+                "within_tol": mc["within_tol"],
+                "tol": MEMORY_REL_TOL,
+            })
+    return table
+
+
+def run_memory_agreement(table: List[dict] = None) -> List[str]:
+    rows = []
+    for r in (memory_agreement_table() if table is None else table):
+        if "space" not in r:
+            rows.append(emit("tuning_time/memory_agreement", 0.0,
+                             f"skipped={r['skipped']}"))
+            continue
+        name = f"tuning_time/memory_agreement/{r['space']}_{r['arch']}"
+        if "skipped" in r:
+            rows.append(emit(name, 0.0, f"skipped={r['skipped']}"))
+        else:
+            assert r["within_tol"], r   # the lowering contract, enforced
+            rows.append(emit(
+                name, 0.0,
+                f"predicted_GiB={r['predicted_bytes'] / 2**30:.3f} "
+                f"lowered_GiB={r['lowered_bytes'] / 2**30:.3f} "
+                f"rel_error={r['rel_error']:.4f}"))
+    return rows
+
+
 def run_batch_speedup(size: str = "6.7b") -> List[str]:
     """Batched symbolic substitution vs per-config evaluation loop."""
     cfg = gpt_config(size)
@@ -257,32 +324,36 @@ def run_batch_speedup(size: str = "6.7b") -> List[str]:
     return rows
 
 
-def run(smoke: bool = False) -> List[str]:
+def run(smoke: bool = False, mem_table: List[dict] = None) -> List[str]:
     if smoke:
         return (run_tuning_time(size="1.3b", n_dev=8, gbs=16)
                 + run_engine_speedup(size="1.3b", n_dev=8, gbs=16)
                 + run_parallel_speedup(size="1.3b", n_dev=8, gbs=16,
                                        repeats=3)
                 + run_batch_speedup(size="1.3b")
-                + run_backend_speedup(size="1.3b", rows=120_000, repeats=2))
+                + run_backend_speedup(size="1.3b", rows=120_000, repeats=2)
+                + run_memory_agreement(mem_table))
     return (run_tuning_time() + run_engine_speedup()
             + run_parallel_speedup() + run_batch_speedup()
-            + run_backend_speedup())
+            + run_backend_speedup() + run_memory_agreement(mem_table))
 
 
-def rows_to_json(rows: List[str]) -> dict:
+def rows_to_json(rows: List[str], mem_table: List[dict] = None) -> dict:
     out = []
     for r in rows:
         name, value, notes = r.split(",", 2)
         out.append({"name": name, "us_per_call": float(value),
                     "notes": notes})
-    return {"benchmark": "tuning_time", "rows": out}
+    return {"benchmark": "tuning_time", "rows": out,
+            "predicted_vs_lowered_memory":
+                memory_agreement_table() if mem_table is None else mem_table}
 
 
 if __name__ == "__main__":
-    rows = run(smoke="--smoke" in sys.argv)
+    mem_table = memory_agreement_table()   # computed once, used twice
+    rows = run(smoke="--smoke" in sys.argv, mem_table=mem_table)
     if "--json" in sys.argv:
         path = sys.argv[sys.argv.index("--json") + 1]
         with open(path, "w") as f:
-            json.dump(rows_to_json(rows), f, indent=2)
+            json.dump(rows_to_json(rows, mem_table), f, indent=2)
         print(f"wrote {path}")

@@ -56,7 +56,7 @@ class Plan:
     def total_layers(self) -> int:
         return sum(s.layers for s in self.stages)
 
-    def global_batch(self, total_layers_check: Optional[int] = None) -> int:
+    def global_batch(self) -> int:
         # all stages see the same data stream: gbs = G * b_0 * DP_0
         s0 = self.stages[0]
         return self.grad_accum * s0.micro_batch * s0.dp

@@ -26,9 +26,10 @@ from repro import compat
 from repro.configs.base import SHAPES, ArchConfig, ShapeConfig, get_arch, list_archs
 from repro.core.plan import Plan, single_stage_plan
 from repro.launch.mesh import make_production_mesh
+from repro.lowering import LoweredPlan, lower_plan
+from repro.lowering.memory import stage_state_bytes
 from repro.models import build_model
 from repro.models.zoo import abstract_params, input_specs
-from repro.parallel import sharding as SH
 from repro.perf.hloanalysis import analyze
 from repro.perf.roofline import model_flops_for, report_from_stats
 from repro.training import optimizer as OPT
@@ -38,42 +39,21 @@ from repro.training.step import (make_prefill_step, make_serve_step,
 RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
 
 
-def state_bytes_per_device(cfg: ArchConfig, mesh, ma, zero: int) -> float:
-    """EXACT model-state bytes per chip for a zero level: walks every param's
-    actual PartitionSpec (indivisible dims — MHA head counts, small norms —
-    really do replicate, which naive N/(dp*tp) accounting misses)."""
-    params_sds, axes_table = abstract_params(cfg)
-    ep_ok = cfg.num_experts > 0 and \
-        cfg.num_experts % max(1, mesh.shape.get(ma.tp or "", 1)) == 0
-
-    def nshards(spec):
-        k = 1
-        for ax in spec:
-            if ax is None:
-                continue
-            for a in (ax if isinstance(ax, tuple) else (ax,)):
-                k *= mesh.shape[a]
-        return k
-
-    total = 0.0
-    for name, sds in params_sds.items():
-        n = 1
-        for d in sds.shape:
-            n *= d
-        axes = axes_table[name]
-        p_sp = SH.param_spec(name, sds.shape, axes, mesh, ma,
-                             zero3=zero >= 3, ep_ok=ep_ok)
-        g_sp = SH.grad_spec(name, sds.shape, axes, mesh, ma, zero=zero,
-                            ep_ok=ep_ok)
-        o_sp = SH.opt_spec(name, sds.shape, axes, mesh, ma, zero=zero,
-                           ep_ok=ep_ok)
-        total += 2.0 * n / nshards(p_sp)        # bf16 weights
-        total += 4.0 * n / nshards(g_sp)        # f32 grad accumulator
-        total += 12.0 * n / nshards(o_sp)       # f32 master + mu + nu
-    return total
+def state_bytes_per_device(cfg: ArchConfig, mesh, zero: int) -> float:
+    """EXACT model-state bytes per chip for a zero level: lowers a trial
+    plan and walks every param's actual PartitionSpec (indivisible dims —
+    MHA head counts, small norms — really do replicate, which naive
+    N/(dp*tp) accounting misses)."""
+    tp = mesh.shape.get("model", 1)
+    n_dev = 1
+    for s in mesh.shape.values():
+        n_dev *= s
+    trial = single_stage_plan(cfg.num_layers, dp=max(1, n_dev // tp), tp=tp,
+                              micro_batch=1, grad_accum=1, zero=zero)
+    return stage_state_bytes(lower_plan(cfg, None, trial, mesh))
 
 
-def min_fitting_zero(cfg: ArchConfig, mesh, ma,
+def min_fitting_zero(cfg: ArchConfig, mesh,
                      budget: float = 0.6 * 16 * 2**30) -> int:
     """Smallest ZeRO level whose model-state bytes fit the per-chip budget.
 
@@ -81,71 +61,41 @@ def min_fitting_zero(cfg: ArchConfig, mesh, ma,
     paper's point is that this knob must be co-tuned, so the *baseline* picks
     the smallest feasible level (what a careful engineer would hand-pick)."""
     for zero in (1, 2, 3):
-        if state_bytes_per_device(cfg, mesh, ma, zero) < budget:
+        if state_bytes_per_device(cfg, mesh, zero) < budget:
             return zero
     return 3
 
 
-def analytic_memory(cfg: ArchConfig, shape: ShapeConfig, plan: Plan, mesh,
-                    ma) -> Dict[str, Any]:
+def analytic_memory(lowered: LoweredPlan) -> Dict[str, Any]:
     """TPU-target memory estimate (bytes/chip), independent of the host
     compile artifact.  XLA:CPU's FloatNormalization legalizes bf16 compute
     through f32 buffers (whole-cache/param f32 copies visible in the host
     HLO), so the compiled `memory_analysis` OVERESTIMATES what the TPU
     (native-bf16 MXU) target allocates; this analytic estimate is the
-    TPU-side number and EXPERIMENTS.md reports both."""
-    st = plan.stages[0]
+    TPU-side number and EXPERIMENTS.md reports both.
+
+    Train cells report BOTH sides of the lowering contract: the symbolic
+    prediction (``analytic_bytes``, what the tuner believed) and the
+    spec-walked ``lowered_bytes`` from ``LoweredPlan.memory_report`` (what
+    the lowered program holds), plus their relative gap — the
+    tuner->runtime consistency signal (docs/plan-lowering.md)."""
+    cfg, shape, plan = lowered.cfg, lowered.shape, lowered.plan
+    rep = lowered.memory_report()
     if shape.kind == "train":
         from repro.core.costmodel import estimate_plan
         est = estimate_plan(cfg, shape, plan)
-        return {"analytic_bytes": est["mem_peak_max"],
-                "fits_16GiB_analytic": bool(est["fits"])}
-    # serving: exact params-per-chip + exact cache-per-chip + transient
-    params_sds, axes_table = abstract_params(cfg)
-    ep_ok = cfg.num_experts > 0 and \
-        cfg.num_experts % max(1, mesh.shape.get(ma.tp or "", 1)) == 0
-
-    def nshards(spec):
-        k = 1
-        for ax in spec:
-            if ax is None:
-                continue
-            for a in (ax if isinstance(ax, tuple) else (ax,)):
-                k *= mesh.shape[a]
-        return k
-
-    total = 0.0
-    for name, sds in params_sds.items():
-        n = 1
-        for d in sds.shape:
-            n *= d
-        spec = SH.param_spec(name, sds.shape, axes_table[name], mesh, ma,
-                             zero3=st.zero >= 3, ep_ok=ep_ok)
-        total += 2.0 * n / nshards(spec)
-    if shape.kind == "decode":
-        model = build_model(cfg)
-        cdt = jnp.int8 if plan.kv_cache_dtype == "int8" else jnp.bfloat16
-        caches = jax.eval_shape(
-            lambda: model.init_caches(shape.global_batch, shape.seq_len,
-                                      cdt))
-        specs = SH.cache_specs(caches, mesh, ma, shape.global_batch)
-        for sds, sh in zip(jax.tree.leaves(caches), jax.tree.leaves(
-                specs, is_leaf=lambda x: hasattr(x, "spec"))):
-            n = 1
-            for d in sds.shape:
-                n *= d
-            total += n * sds.dtype.itemsize / nshards(sh.spec)
-        trans = 0.3 * 2**30
-    else:  # prefill transient: a couple of layers' activations + logits
-        from repro.core.costmodel import arch_stats
-        stt = arch_stats(cfg)
-        dp = st.dp
-        tok_local = shape.global_batch * shape.seq_len / max(1, dp)
-        trans = (4.0 * stt.act_coef_full * stt.d_model * tok_local
-                 / max(1, st.tp)) + 2**30
-    total += trans + 0.75 * 2**30
-    return {"analytic_bytes": total,
-            "fits_16GiB_analytic": bool(total < 16 * 2**30)}
+        pred = float(est["mem_peak_max"])
+        return {"analytic_bytes": pred,
+                "fits_16GiB_analytic": bool(est["fits"]),
+                "lowered_bytes": rep.peak_bytes,
+                "fits_16GiB_lowered": bool(rep.fits),
+                "predicted_vs_lowered_rel":
+                    abs(rep.peak_bytes - pred) / max(pred, 1.0)}
+    # serving: exact params-per-chip (+ cache-per-chip) + transient, all
+    # from the lowered spec tables
+    return {"analytic_bytes": rep.peak_bytes,
+            "fits_16GiB_analytic": bool(rep.peak_bytes < 16 * 2**30),
+            "lowered_bytes": rep.peak_bytes}
 
 
 def analytic_hbm_traffic(cfg: ArchConfig, shape: ShapeConfig,
@@ -192,14 +142,13 @@ def baseline_plan(cfg: ArchConfig, shape: ShapeConfig, mesh,
     micro-batch 1, FlashAttention on (the paper's Fig. 11 setting)."""
     ov = dict(overrides or {})
     tp = ov.pop("tp", mesh.shape.get("model", 1))
-    # a tp=1 plan folds the model axis into DP (MeshAxes.for_plan), so dp
-    # always spans all chips divided by tp
+    # a tp=1 plan folds the model axis into DP (lowering.plan_mesh_axes),
+    # so dp always spans all chips divided by tp
     dp = ov.pop("dp", mesh.devices.size // tp)
     ov.setdefault("attn_impl", "blocked")
     if "zero" not in ov:
         if shape.kind == "train":
-            ma = SH.MeshAxes.from_mesh(mesh)
-            ov["zero"] = min_fitting_zero(cfg, mesh, ma)
+            ov["zero"] = min_fitting_zero(cfg, mesh)
         else:
             ov["zero"] = 0   # serving: replicated weights per TP group
             #                  (zero=3 override = weight-gathered serving)
@@ -242,46 +191,44 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     mesh_name = "x".join(str(s) for s in mesh.devices.shape)
     model = build_model(cfg)
     plan = baseline_plan(cfg, shape, mesh, plan_overrides)
-    ma = SH.MeshAxes.for_plan(mesh, plan.stages[0].tp)
-    params_sds, axes_table = abstract_params(cfg)
+    low = lower_plan(cfg, shape, plan, mesh)
+    params_sds, axes_table = low.params_sds, low.axes_table
 
     t0 = time.time()
     with compat.set_mesh(mesh):
         if shape.kind == "train":
-            step = make_train_step(model, plan, mesh)
+            step = make_train_step(model, plan, mesh, lowered=low)
             state_abs = OPT.init_state(params_sds, axes_table, plan.stages[0])
             state_sds = _attach(state_abs, step.state_shardings)
             batch = input_specs(cfg, shape)
-            batch_sds = _attach(batch, SH.batch_specs(batch, mesh, ma))
-            lowered = step.fn.lower(state_sds, batch_sds)
+            batch_sds = _attach(batch, low.batch_shardings(batch))
+            program = step.fn.lower(state_sds, batch_sds)
         elif shape.kind == "prefill":
-            step = make_prefill_step(model, plan, mesh)
-            psh = SH.build_param_shardings(axes_table, params_sds, cfg, mesh,
-                                           ma, plan.stages[0])
-            p_sds = _attach(params_sds, psh)
+            step = make_prefill_step(model, plan, mesh, lowered=low)
+            p_sds = _attach(params_sds, low.param_shardings())
             batch = input_specs(cfg, shape)
-            batch_sds = _attach(batch, SH.batch_specs(batch, mesh, ma))
-            lowered = step.fn.lower(p_sds, batch_sds)
+            batch_sds = _attach(batch, low.batch_shardings(batch))
+            program = step.fn.lower(p_sds, batch_sds)
         else:  # decode
             b, s = shape.global_batch, shape.seq_len
-            step = make_serve_step(model, plan, mesh, b, s)
-            psh = SH.build_param_shardings(axes_table, params_sds, cfg, mesh,
-                                           ma, plan.stages[0])
-            p_sds = _attach(params_sds, psh)
+            step = make_serve_step(model, plan, mesh, b, s, lowered=low)
+            p_sds = _attach(params_sds, low.param_shardings())
             cache_dtype = jnp.int8 if plan.kv_cache_dtype == "int8" \
                 else jnp.bfloat16
             spec = input_specs(cfg, shape, cache_dtype=cache_dtype)
             tok_sds = spec["tokens"]
             cache_sds = _attach(spec["caches"], step.batch_shardings)
-            lowered = step.fn.lower(p_sds, tok_sds, cache_sds)
+            program = step.fn.lower(p_sds, tok_sds, cache_sds)
         t_lower = time.time() - t0
 
         t0 = time.time()
-        compiled = lowered.compile()
+        compiled = program.compile()
         t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # jax 0.4.x: one dict per program
+        cost = cost[0] if cost else {}
     hlo_text = compiled.as_text()
     stats = analyze(hlo_text)
     chips = mesh.devices.size
@@ -308,7 +255,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
             "host_temp_bytes": mem.host_temp_size_in_bytes,
             "device_total_bytes": dev_bytes,
             "fits_16GiB": bool(dev_bytes < 16 * 2**30),
-            **analytic_memory(cfg, shape, plan, mesh, ma),
+            **analytic_memory(low),
         },
         "xla_cost": {k: cost.get(k) for k in ("flops", "bytes accessed")},
         "hlo_stats": {

@@ -14,17 +14,24 @@ from repro import compat
 import numpy as np
 
 
-def generate(model, params, prompts: jnp.ndarray, gen: int, mesh, plan):
+def generate(model, params, prompts: jnp.ndarray, gen: int, mesh, plan,
+             lowered=None):
     """Greedy decode `gen` tokens for a batch of fixed-length prompts."""
+    from repro.lowering import lower_plan
     from repro.models.zoo import pad_caches
     from repro.training.step import make_prefill_step, make_serve_step
 
     b, plen = prompts.shape
     max_len = plen + gen
-    prefill = make_prefill_step(model, plan, mesh, return_cache=True)
+    # one lowering shared by the prefill and decode programs: both read the
+    # same mesh-axis mapping / spec tables / serve exec config
+    low = lowered or lower_plan(model.cfg, None, plan, mesh)
+    prefill = make_prefill_step(model, plan, mesh, return_cache=True,
+                                lowered=low)
     logits, caches = prefill.fn(params, {"tokens": prompts})
     caches = pad_caches(caches, gen)
-    serve = make_serve_step(model, plan, mesh, b, max_len, donate=False)
+    serve = make_serve_step(model, plan, mesh, b, max_len, donate=False,
+                            lowered=low)
     tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
     out = [tok]
     for _ in range(gen - 1):
@@ -56,13 +63,22 @@ def main():
     mesh = make_host_mesh(n, 1)
     plan = single_stage_plan(cfg.num_layers, dp=n, tp=1, micro_batch=1,
                              grad_accum=1, zero=0, ckpt_layers=0)
+    from repro.configs.base import ShapeConfig
+    from repro.lowering import lower_plan
+    shape = ShapeConfig("serve", args.prompt_len + args.gen, args.batch,
+                        "decode")
+    low = lower_plan(cfg, shape, plan, mesh)
+    rep = low.memory_report()
+    print(f"# lowered serve memory: {rep.peak_bytes / 2**30:.2f} GiB "
+          f"per device (weights+cache+transient)")
     with compat.set_mesh(mesh):
         params, _ = model.init(jax.random.PRNGKey(0))
         prompts = jax.random.randint(jax.random.PRNGKey(1),
                                      (args.batch, args.prompt_len), 0,
                                      cfg.vocab_size).astype(jnp.int32)
         t0 = time.time()
-        toks = generate(model, params, prompts, args.gen, mesh, plan)
+        toks = generate(model, params, prompts, args.gen, mesh, plan,
+                        lowered=low)
         dt = time.time() - t0
     total = args.batch * args.gen
     print(f"generated {total} tokens in {dt:.2f}s "

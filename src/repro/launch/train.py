@@ -59,7 +59,17 @@ def main():
               f"({rep.throughput_samples:.2f} samples/s)")
         print(rep.plan.to_json())
         plan = rep.plan
-        if not args.smoke:
+
+    if plan is not None:
+        # tuner->runtime consistency: what the cost model predicted vs what
+        # the lowered spec tables actually hold per device
+        from repro.lowering import memory_consistency
+        mc = memory_consistency(cfg, shape, plan)
+        print(f"# memory: predicted {mc['predicted_bytes'] / 2**30:.2f} GiB "
+              f"lowered {mc['lowered_bytes'] / 2**30:.2f} GiB "
+              f"(rel err {mc['rel_error']:.3f}, "
+              f"within_tol={mc['within_tol']})")
+        if args.tune and not args.smoke:
             return 0
 
     if not args.smoke:
@@ -71,8 +81,8 @@ def main():
     # ---- smoke training on host devices ------------------------------------
     from repro.core.plan import single_stage_plan
     from repro.launch.mesh import make_host_mesh
+    from repro.lowering import lower_plan
     from repro.models.zoo import build_model
-    from repro.parallel import sharding as SH
     from repro.training.data import BatchSpec, SyntheticLM
     from repro.training.loop import LoopConfig, TrainLoop
     from repro.training.step import init_sharded_state, make_train_step
@@ -88,10 +98,16 @@ def main():
                              zero=1, ckpt_layers=rcfg.num_layers // 2)
     mesh = make_host_mesh(n, tp)
     seq = 128
+    smoke_shape = ShapeConfig("smoke", seq, gbs, "train")
+    low = lower_plan(rcfg, smoke_shape, plan, mesh)
+    rep = low.memory_report()
+    print(f"# smoke plan lowered: peak {rep.peak_bytes / 2**30:.2f} GiB "
+          f"per device (fits={rep.fits})")
     with compat.set_mesh(mesh):
-        step = make_train_step(model, plan, mesh)
+        step = make_train_step(model, plan, mesh, lowered=low)
         state, shardings = init_sharded_state(model, plan, mesh,
-                                              jax.random.PRNGKey(0))
+                                              jax.random.PRNGKey(0),
+                                              lowered=low)
         data = SyntheticLM(BatchSpec(global_batch=gbs, seq_len=seq,
                                      vocab_size=rcfg.vocab_size))
 

@@ -1,0 +1,25 @@
+"""Plan lowering: the single interpretation layer between a tuned
+:class:`repro.core.plan.Plan` and everything that executes or analyzes it.
+
+``lower_plan(cfg, shape, plan, mesh)`` is the ONE place where a plan's
+per-stage knobs (L, b, DP, TP, ZeRO, CKPT, WO/GO/OO/AO) are mapped to mesh
+axes, sharding-spec tables, remat/offload segmentation, kernel selection,
+and pipeline stage-block assignment.  Every runtime entry point — dryrun,
+single-stage train step, pipeline train step, prefill/serve — consumes the
+resulting :class:`LoweredPlan`; ``repro.parallel.sharding`` stays a pure
+spec library with this package as its only runtime caller.
+
+``LoweredPlan.memory_report()`` recomputes per-device state/activation
+bytes from the lowered tables, closing the loop with the symbolic cost
+model (`docs/plan-lowering.md` documents the contract and the
+predicted-vs-lowered cross-check tolerance).
+"""
+from repro.lowering.lower import (LoweredPlan, LoweredStage, lower_plan,
+                                  plan_mesh_axes)
+from repro.lowering.memory import (MemoryReport, StageMemory,
+                                   memory_consistency, MEMORY_REL_TOL)
+
+__all__ = [
+    "LoweredPlan", "LoweredStage", "lower_plan", "plan_mesh_axes",
+    "MemoryReport", "StageMemory", "memory_consistency", "MEMORY_REL_TOL",
+]

@@ -1,0 +1,302 @@
+"""Per-device memory accounting from the *lowered* tables.
+
+``memory_report(lowered)`` walks the actual PartitionSpec tables a
+LoweredPlan carries — counting real shard counts per tensor, so
+indivisible dims (MHA head counts, small norms) that replicate are
+charged at full size — plus the ExecConfig's integer remat/offload
+segmentation and the WO/OO host split points.  The activation / transient
+/ logits terms reuse the cost model's analytic per-arch coefficients
+(``arch_stats``), so the report and the symbolic predictor share one
+activation model and differ only where the runtime genuinely differs
+from the symbolic idealization:
+
+* spec-exact state bytes vs the uniform ``n/tp`` division,
+* integer layer counts (``round(ao*ckpt)`` offloaded layers) vs
+  continuous ratios,
+* host offload restricted to stacked-layer entries (the runtime cannot
+  split non-stacked tensors) vs ratios applied to all state.
+
+``memory_consistency`` quantifies exactly that gap against
+``estimate_plan`` for a concrete (cfg, shape, plan); the golden-plan
+configs must agree within ``MEMORY_REL_TOL`` (asserted in
+tests/test_lowering.py, reported per config by
+``benchmarks/tuning_time.py --json``).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, TYPE_CHECKING
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.hardware import V5E, HardwareSpec
+from repro.parallel.sharding import LAYER_AXES
+
+if TYPE_CHECKING:                                    # pragma: no cover
+    from repro.lowering.lower import LoweredPlan, LoweredStage
+
+# Stated tolerance of the predicted-vs-lowered cross-check.  The dominant
+# divergence on the golden-plan configs is the first one in the module
+# docstring: granite-3-8b's vocab (49155) is not divisible by the plan's
+# tp=8, so the lowered specs replicate the embedding — and its grads,
+# master, and (non-offloadable, non-stacked) mu/nu — where the symbolic
+# model divides uniformly by tp and offloads by ratio (~3.0 GiB on a
+# ~14.7 GiB prediction; observed rel error 0.207, see the
+# predicted_vs_lowered_memory table in benchmarks/tuning_time.py --json).
+# Tightening this requires teaching the cost model spec-exact state
+# accounting, which would change tuner selections and is pinned by the
+# golden fixtures — tracked as a ROADMAP open item.
+MEMORY_REL_TOL = 0.25
+
+_SHARED_PREFIXES = ("shared/", "shared_attn/")
+
+
+def _nshards(mesh, spec) -> int:
+    """Device count a PartitionSpec divides a tensor over."""
+    k = 1
+    for ax in spec:
+        if ax is None:
+            continue
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            k *= mesh.shape[a]
+    return k
+
+
+@dataclass(frozen=True)
+class StageMemory:
+    """Per-device bytes of one lowered stage (train kind unless noted)."""
+    index: int
+    weight_bytes: float = 0.0        # bf16 weights
+    grad_bytes: float = 0.0          # f32 grad accumulator
+    master_bytes: float = 0.0        # f32 master weights (device part)
+    opt_bytes: float = 0.0           # f32 mu+nu (device part)
+    host_state_bytes: float = 0.0    # WO/OO slices living in host memory
+    act_bytes: float = 0.0           # saved activations at peak
+    host_act_bytes: float = 0.0      # AO-offloaded activation bytes
+    cache_bytes: float = 0.0         # KV/state caches (serving)
+    transient_bytes: float = 0.0     # working set + recompute scratch
+    logits_bytes: float = 0.0
+    reserved_bytes: float = 0.0      # XLA runtime + fragmentation
+
+    @property
+    def state_bytes(self) -> float:
+        return (self.weight_bytes + self.grad_bytes + self.master_bytes
+                + self.opt_bytes)
+
+    @property
+    def device_bytes(self) -> float:
+        return (self.state_bytes + self.act_bytes + self.cache_bytes
+                + self.transient_bytes + self.logits_bytes
+                + self.reserved_bytes)
+
+
+@dataclass(frozen=True)
+class MemoryReport:
+    kind: str                        # train | prefill | decode
+    stages: tuple
+    budget_bytes: float
+
+    @property
+    def peak_bytes(self) -> float:
+        return max(s.device_bytes for s in self.stages)
+
+    @property
+    def fits(self) -> bool:
+        return self.peak_bytes <= self.budget_bytes
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "kind": self.kind,
+            "peak_bytes": self.peak_bytes,
+            "budget_bytes": self.budget_bytes,
+            "fits": self.fits,
+            "per_stage": [{
+                "stage": s.index,
+                "state_bytes": s.state_bytes,
+                "host_state_bytes": s.host_state_bytes,
+                "act_bytes": s.act_bytes,
+                "host_act_bytes": s.host_act_bytes,
+                "cache_bytes": s.cache_bytes,
+                "device_bytes": s.device_bytes,
+            } for s in self.stages],
+        }
+
+
+def _param_class(name: str, axes) -> str:
+    if axes and axes[0] in LAYER_AXES:
+        return "stacked"
+    if name.startswith(_SHARED_PREFIXES):
+        return "shared"
+    return "embed"
+
+
+def _state_walk(lowered: "LoweredPlan", st: "LoweredStage",
+                layer_frac: float) -> Dict[str, float]:
+    """Spec-exact per-device state bytes of one stage.
+
+    Stacked params contribute their ``layer_frac`` share (this stage's
+    layers / total); shared-block params replicate to every stage;
+    embed/head params follow the cost model's attribution (first and last
+    stage).  WO/OO splits move leading stacked slices to host.
+    """
+    mesh = lowered.mesh
+    out = dict(weight=0.0, grad=0.0, master=0.0, opt=0.0, host=0.0)
+    for name, sds in lowered.params_sds.items():
+        axes = lowered.axes_table[name]
+        cls = _param_class(name, axes)
+        if cls == "stacked":
+            frac = layer_frac
+        elif cls == "shared":
+            frac = 1.0
+        else:
+            frac = 1.0 if (st.has_embed or st.has_head) else 0.0
+        if frac == 0.0:
+            continue
+        n = math.prod(sds.shape) * frac
+        lead = sds.shape[0] if sds.shape else 1
+        k_m = st.master_split.get(name, 0)
+        k_o = st.opt_split.get(name, 0)
+        dev_m = (lead - k_m) / lead if k_m else 1.0
+        dev_o = (lead - k_o) / lead if k_o else 1.0
+        w = 2.0 * n / _nshards(mesh, st.param_specs[name])
+        g = 4.0 * n / _nshards(mesh, st.grad_specs[name])
+        o_sh = _nshards(mesh, st.opt_specs[name])
+        out["weight"] += w
+        out["grad"] += g
+        out["master"] += 4.0 * n * dev_m / o_sh
+        out["opt"] += 8.0 * n * dev_o / o_sh
+        out["host"] += (4.0 * n * (1.0 - dev_m)
+                        + 8.0 * n * (1.0 - dev_o)) / o_sh
+    return out
+
+
+def stage_state_bytes(lowered: "LoweredPlan", i: int = 0) -> float:
+    """Device-resident model-state bytes (weights + grad accumulator +
+    master + mu/nu) of one lowered stage — the exact spec walk, counting
+    replicated indivisible dims at full size."""
+    st = lowered.stages[i]
+    frac = st.stage.layers / lowered.plan.total_layers
+    s = _state_walk(lowered, st, frac)
+    return s["weight"] + s["grad"] + s["master"] + s["opt"]
+
+
+def memory_report(lowered: "LoweredPlan", *, hw: HardwareSpec = V5E,
+                  cp=None) -> MemoryReport:
+    """Actual per-device bytes from the lowered tables (module docstring)."""
+    from repro.core.costmodel import CostParams, arch_stats
+    cp = cp or CostParams()
+    shape = lowered.shape
+    if shape is None:
+        raise ValueError("memory_report needs the workload shape; pass it "
+                         "to lower_plan")
+    cfg, plan = lowered.cfg, lowered.plan
+    stt = arch_stats(cfg)
+    budget = hw.hbm_bytes * cp.mem_headroom
+
+    if shape.kind != "train":
+        return _serve_report(lowered, stt, shape, budget, cp)
+
+    total_layers = plan.total_layers
+    stages: List[StageMemory] = []
+    for st in lowered.stages:
+        sc, ec = st.stage, st.exec_cfg
+        state = _state_walk(lowered, st, sc.layers / total_layers)
+        tok = sc.micro_batch * shape.seq_len
+        sp_div = sc.tp if plan.sequence_parallel else 1
+        act_full_l = 2.0 * stt.act_coef_full * stt.d_model * tok / sp_div
+        act_ckpt_l = 2.0 * stt.act_coef_ckpt * stt.d_model * tok / sp_div
+        ck, off = ec.ckpt_layers, ec.offload_layers
+        act = st.inflight * ((ck - off) * act_ckpt_l
+                             + (sc.layers - ck) * act_full_l)
+        act_host = st.inflight * off * act_ckpt_l
+        # transient working set, mirroring the symbolic model: one layer's
+        # full intermediates during (re)compute, gathered ZeRO-3 params
+        # for ~2 layers, bwd boundary grads, and the bwd recompute scratch
+        trans = 2.0 * act_full_l + 2.0 * act_ckpt_l * st.inflight \
+            + act_full_l
+        if sc.zero >= 3:
+            trans += 2.0 * (2.0 * stt.n_layer / sc.tp)
+        logits = (2.0 * sc.micro_batch * min(512, shape.seq_len)
+                  * stt.vocab * 4.0 / sc.tp) if st.has_head else 0.0
+        stages.append(StageMemory(
+            index=st.index, weight_bytes=state["weight"],
+            grad_bytes=state["grad"], master_bytes=state["master"],
+            opt_bytes=state["opt"], host_state_bytes=state["host"],
+            act_bytes=act, host_act_bytes=act_host,
+            transient_bytes=trans, logits_bytes=logits,
+            reserved_bytes=cp.runtime_reserved))
+    return MemoryReport(kind="train", stages=tuple(stages),
+                        budget_bytes=budget)
+
+
+def _serve_report(lowered: "LoweredPlan", stt, shape: ShapeConfig,
+                  budget: float, cp) -> MemoryReport:
+    """Serving: exact params-per-chip (+ exact cache-per-chip for decode)
+    + the transient envelope the dry-run has always used."""
+    st = lowered.stages[0]
+    sc = st.stage
+    mesh = lowered.mesh
+    weight = 0.0
+    for name, sds in lowered.params_sds.items():
+        n = math.prod(sds.shape)
+        weight += 2.0 * n / _nshards(mesh, st.param_specs[name])
+    cache = 0.0
+    if shape.kind == "decode":
+        import jax
+        import jax.numpy as jnp
+        from repro.models import build_model
+        from repro.parallel import sharding as SH
+        model = build_model(lowered.cfg)
+        cdt = (jnp.int8 if lowered.plan.kv_cache_dtype == "int8"
+               else jnp.bfloat16)
+        caches = jax.eval_shape(
+            lambda: model.init_caches(shape.global_batch, shape.seq_len,
+                                      cdt))
+        specs = SH.cache_specs(caches, mesh, st.mesh_axes,
+                               shape.global_batch)
+        for sds, sh in zip(jax.tree.leaves(caches), jax.tree.leaves(
+                specs, is_leaf=lambda x: hasattr(x, "spec"))):
+            n = math.prod(sds.shape)
+            cache += n * sds.dtype.itemsize / _nshards(mesh, sh.spec)
+        trans = 0.3 * 2**30
+    else:   # prefill: a couple of layers' activations + logits headroom
+        tok_local = shape.global_batch * shape.seq_len / max(1, sc.dp)
+        trans = (4.0 * stt.act_coef_full * stt.d_model * tok_local
+                 / max(1, sc.tp)) + 2**30
+    stage = StageMemory(index=0, weight_bytes=weight, cache_bytes=cache,
+                        transient_bytes=trans,
+                        reserved_bytes=0.75 * 2**30)
+    return MemoryReport(kind=shape.kind, stages=(stage,),
+                        budget_bytes=budget)
+
+
+def memory_consistency(cfg: ArchConfig, shape: ShapeConfig, plan, *,
+                       hw: HardwareSpec = V5E) -> Dict[str, Any]:
+    """Predicted (symbolic estimate_plan) vs lowered (memory_report)
+    per-device peak bytes for one concrete plan, on an abstract mesh
+    shaped exactly like the plan.  This is the tuner->runtime consistency
+    check: the cost model that *selected* the plan and the lowering that
+    *executes* it must agree on what the plan costs."""
+    from repro import compat
+    from repro.core.costmodel import estimate_plan
+    from repro.lowering.lower import lower_plan
+
+    est = estimate_plan(cfg, shape, plan, hw=hw)
+    st0 = plan.stages[0]
+    if plan.num_stages > 1:
+        mesh = compat.abstract_mesh(
+            (plan.num_stages, st0.dp, st0.tp), ("stage", "data", "model"))
+    else:
+        mesh = compat.abstract_mesh((st0.dp, st0.tp), ("data", "model"))
+    rep = lower_plan(cfg, shape, plan, mesh).memory_report(hw=hw)
+    predicted = float(est["mem_peak_max"])
+    lowered_b = float(rep.peak_bytes)
+    rel = abs(lowered_b - predicted) / max(predicted, 1.0)
+    return {
+        "predicted_bytes": predicted,
+        "lowered_bytes": lowered_b,
+        "rel_error": rel,
+        "within_tol": rel <= MEMORY_REL_TOL,
+        "predicted_per_stage": [float(x) for x in est["mem_per_stage"]],
+        "lowered_per_stage": [s.device_bytes for s in rep.stages],
+    }

@@ -22,24 +22,21 @@ Heterogeneity notes (DESIGN.md §Arch-applicability):
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.configs.base import ArchConfig
 from repro.core.plan import Plan
+from repro.lowering import LoweredPlan, lower_plan
 from repro.models import layers as L
-from repro.models.common import (ExecConfig, Params, subtree, use_rules,
-                                 softmax_xent)
-from repro.models.zoo import Model, abstract_params
-from repro.parallel import sharding as SH
+from repro.models.common import Params, subtree, use_rules
+from repro.models.zoo import Model
 from repro.training import optimizer as OPT
 
 PIPELINE_FAMILIES = ("dense", "moe", "ssm")   # uniform-stack decoders
@@ -49,29 +46,10 @@ def supports_pipeline(cfg: ArchConfig) -> bool:
     return cfg.family in PIPELINE_FAMILIES
 
 
-# ---------------------------------------------------------------------------
-# sharding helpers
-# ---------------------------------------------------------------------------
-
-
-def stage_param_specs(params_sds, axes_table, cfg, mesh, ma, stage0,
-                      n_stages: int) -> Dict[str, NamedSharding]:
-    """Per-param NamedShardings: stacked-layer dim 0 -> 'stage'; remaining
-    dims via the single-stage TP/ZeRO rules."""
-    ep_ok = cfg.num_experts > 0 and \
-        cfg.num_experts % max(1, mesh.shape.get(ma.tp or "", 1)) == 0
-    out = {}
-    for name, sds in params_sds.items():
-        axes = axes_table[name]
-        if axes and axes[0] == "layers":
-            inner = SH.param_spec(name, sds.shape[1:], axes[1:], mesh, ma,
-                                  zero3=stage0.zero >= 3, ep_ok=ep_ok)
-            out[name] = NamedSharding(mesh, P("stage", *inner))
-        else:
-            spec = SH.param_spec(name, sds.shape, axes, mesh, ma,
-                                 zero3=stage0.zero >= 3, ep_ok=ep_ok)
-            out[name] = NamedSharding(mesh, spec)
-    return out
+# The per-param sharding tables (stacked-layer dim 0 -> 'stage', remaining
+# dims via the single-stage TP/ZeRO rules) and the shard_map manual specs
+# are produced by ``repro.lowering`` (`LoweredPlan.pipeline_*`); this
+# module only realizes the stage programs.
 
 
 # ---------------------------------------------------------------------------
@@ -79,7 +57,7 @@ def stage_param_specs(params_sds, axes_table, cfg, mesh, ma, stage0,
 # ---------------------------------------------------------------------------
 
 
-def _stage_block_fn(model: Model, cfg: ArchConfig, plan: Plan):
+def _stage_block_fn(model: Model, cfg: ArchConfig, low: LoweredPlan):
     """(stage-local stacked params, x, stage_idx) -> x after L/S layers.
 
     Heterogeneous per-stage CKPT_i/AO_i are realized by `lax.switch` over
@@ -90,15 +68,11 @@ def _stage_block_fn(model: Model, cfg: ArchConfig, plan: Plan):
     (compile-time, not run-time, overhead)."""
     from repro.models.decoder import apply_block
     from repro.models.common import segmented_layer_scan
+    plan = low.plan
 
-    def branch_fn(st):
-        n_local = st.layers
-        ec = ExecConfig(
-            ckpt_layers=min(st.ckpt_layers, n_local),
-            offload_layers=int(round(st.ao * min(st.ckpt_layers, n_local))),
-            remat_policy=plan.remat_policy, attn_impl=plan.attn_impl,
-            use_pallas=plan.use_pallas,
-            sequence_parallel=plan.sequence_parallel)
+    def branch_fn(ls):
+        n_local = ls.stage.layers
+        ec = ls.exec_cfg   # the lowered CKPT_i/AO_i segmentation
 
         def run(stacked, x, aux0):
             def body(carry, lp):
@@ -113,7 +87,7 @@ def _stage_block_fn(model: Model, cfg: ArchConfig, plan: Plan):
     keyed = [(min(s.ckpt_layers, s.layers), s.ao) for s in plan.stages]
     uniq = sorted(set(keyed))
     branch_of_stage = jnp.asarray([uniq.index(k) for k in keyed], jnp.int32)
-    branches = [branch_fn(plan.stages[keyed.index(k)]) for k in uniq]
+    branches = [branch_fn(low.stages[keyed.index(k)]) for k in uniq]
 
     def block(stacked: Params, x: jax.Array, stage_idx: jax.Array,
               aux0: jax.Array):
@@ -125,7 +99,8 @@ def _stage_block_fn(model: Model, cfg: ArchConfig, plan: Plan):
     return block
 
 
-def make_pipeline_loss(model: Model, plan: Plan, mesh: Mesh) -> Callable:
+def make_pipeline_loss(model: Model, plan: Plan, mesh: Mesh,
+                       lowered: Optional[LoweredPlan] = None) -> Callable:
     """(params, batch) -> mean loss, running the GPipe loop inside a
     partial-manual shard_map over the 'stage' axis."""
     cfg = model.cfg
@@ -138,17 +113,14 @@ def make_pipeline_loss(model: Model, plan: Plan, mesh: Mesh) -> Callable:
             "pipeline stage mapping needs partial-manual shard_map "
             "(jax.shard_map); this jax is too old — single-stage SPMD and "
             "all tuning/analysis paths remain available")
+    low = lowered or lower_plan(cfg, None, plan, mesh)
     S = plan.num_stages
     G = plan.grad_accum
-    st0 = plan.stages[0]
-    block = _stage_block_fn(model, cfg, plan)
-    ma = SH.MeshAxes.from_mesh(mesh)
-    rules = SH.make_shard_rules(mesh, ma, plan.sequence_parallel)
+    block = _stage_block_fn(model, cfg, low)
+    rules = low.shard_rules()
     from repro.models.decoder import embed_tokens, unembed_matrix, chunked_xent
 
-    ec = ExecConfig(remat_policy=plan.remat_policy, attn_impl=plan.attn_impl,
-                    use_pallas=plan.use_pallas,
-                    sequence_parallel=plan.sequence_parallel)
+    ec = low.plan_exec_cfg   # stage-agnostic embed/unembed compute
 
     def pipelined(params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
         """Runs per-stage (manual over 'stage'; auto over data/model)."""
@@ -203,16 +175,15 @@ def make_pipeline_loss(model: Model, plan: Plan, mesh: Mesh) -> Callable:
         aux = jax.lax.psum(aux_sum, "stage") / jnp.maximum(G, 1)
         return loss + AUX_COEF * aux / cfg.num_layers
 
-    params_sds, axes_table = abstract_params(cfg)
+    params_sds, axes_table = low.params_sds, low.axes_table
     _orig_dtype = {n: sds.dtype for n, sds in params_sds.items()}
     _is_stacked = {n: bool(axes_table[n]) and axes_table[n][0] == "layers"
                    for n in params_sds}
-    pspecs = stage_param_specs(params_sds, axes_table, cfg, mesh, ma, st0, S)
+    pspecs = low.pipeline_param_shardings()
     # partial-manual shard_map: specs mention ONLY the manual 'stage' axis;
     # DP/TP/ZeRO shardings over the auto axes ride through unchanged (set by
     # the outer jit in_shardings + with_sharding_constraint inside).
-    manual_spec = {n: (P("stage") if _is_stacked[n] else P())
-                   for n in params_sds}
+    manual_spec = dict(low.pipeline_manual_specs)
     in_specs = (manual_spec, {"tokens": P(), "labels": P()})
     manual = frozenset({"stage"})
 
@@ -248,43 +219,19 @@ class PipelineStep:
 
 def make_pipeline_train_step(model: Model, plan: Plan, mesh: Mesh,
                              adam: OPT.AdamConfig = OPT.AdamConfig(),
-                             donate: bool = True) -> PipelineStep:
+                             donate: bool = True,
+                             lowered: Optional[LoweredPlan] = None
+                             ) -> PipelineStep:
     cfg = model.cfg
     S = plan.num_stages
     assert S > 1 and "stage" in mesh.axis_names
     st0 = plan.stages[0]
-    ma = SH.MeshAxes.from_mesh(mesh)
-    loss_fn = make_pipeline_loss(model, plan, mesh)
-    pspecs = loss_fn.param_shardings
+    low = lowered or lower_plan(cfg, None, plan, mesh)
+    loss_fn = make_pipeline_loss(model, plan, mesh, lowered=low)
 
-    params_sds, axes_table = abstract_params(cfg)
-    state_abs = OPT.init_state(params_sds, axes_table, st0)
-
-    def opt_sh(name, leaf_spec):
-        return NamedSharding(mesh, leaf_spec)
-
-    # optimizer state mirrors the param shardings (master/mu/nu f32)
-    def entry_shardings(ratio):
-        hk = compat.host_memory_kind()
-        out = {}
-        for n, sds in params_sds.items():
-            sh = pspecs[n]
-            k = OPT.split_k(n, sds.shape, axes_table, ratio)
-            if k:
-                host = (NamedSharding(mesh, sh.spec, memory_kind=hk)
-                        if hk else NamedSharding(mesh, sh.spec))
-                out[n] = {"host": host, "dev": NamedSharding(mesh, sh.spec)}
-            else:
-                out[n] = sh
-        return out
-
-    st_shardings = {
-        "step": NamedSharding(mesh, P()),
-        "params": dict(pspecs),
-        "master": entry_shardings(st0.wo),
-        "mu": entry_shardings(st0.oo),
-        "nu": entry_shardings(st0.oo),
-    }
+    # optimizer state mirrors the param shardings (master/mu/nu f32),
+    # WO/OO splits included
+    st_shardings = low.pipeline_state_shardings()
 
     def train_step(state, batch):
         params = state["params"]

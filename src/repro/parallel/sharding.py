@@ -4,19 +4,23 @@ All parallelism in the runtime is *data, not code*: a Plan maps to
 NamedShardings for params / optimizer states / gradients / caches, XLA's SPMD
 partitioner inserts the collectives (TP all-reduce pairs, ZeRO all-gather /
 reduce-scatter, sequence-parallel resharding).
+
+This module is a *pure spec library*: it knows how to map one tensor's
+logical axes to a PartitionSpec, but never interprets a Plan.  The only
+runtime caller is ``repro.lowering`` (`lower_plan`), which assembles the
+per-stage spec tables every entry point consumes; see
+docs/plan-lowering.md.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ArchConfig
-from repro.core.plan import Plan, StageConfig
-from repro.models.common import Axes, ShardRules
+from repro.models.common import ShardRules
 
 # logical axes eligible for tensor parallelism, in priority order
 TP_PRIORITY = ("expert", "mlp", "heads", "inner2", "inner", "kv_heads",
@@ -39,20 +43,9 @@ class MeshAxes:
         tp = "model" if "model" in names else None
         return MeshAxes(dp=dp or (names[0],), tp=tp, fsdp=dp or (names[0],))
 
-    @staticmethod
-    def for_plan(mesh: Mesh, tp_size: int) -> "MeshAxes":
-        """Plan-aware axis mapping: a tp=1 plan folds the 'model' axis into
-        DP/FSDP (the production mesh shape is fixed; which axes mean what is
-        the plan's decision — e.g. indivisible-head archs want tp=1 and
-        pure-FSDP over all 256 chips)."""
-        ma = MeshAxes.from_mesh(mesh)
-        if tp_size == 1 and ma.tp is not None:
-            dp = ma.dp + (ma.tp,)
-            return MeshAxes(dp=dp, tp=None, fsdp=dp)
-        return ma
 
-
-def _axis_size(mesh: Mesh, axes) -> int:
+def axis_size(mesh: Mesh, axes) -> int:
+    """Total device count of a MeshAxes role (None -> 1, tuples multiply)."""
     if axes is None:
         return 1
     if isinstance(axes, str):
@@ -101,13 +94,13 @@ def choose_fsdp_dim(axes: Sequence[Optional[str]], shape: Sequence[int],
 
 def param_spec(name: str, shape: Sequence[int], axes: Sequence[Optional[str]],
                mesh: Mesh, ma: MeshAxes, *, zero3: bool, ep_ok: bool) -> P:
-    tp_size = _axis_size(mesh, ma.tp)
+    tp_size = axis_size(mesh, ma.tp)
     spec: list = [None] * len(shape)
     ti = choose_tp_dim(axes, shape, tp_size, ep_ok)
     if ti is not None:
         spec[ti] = ma.tp
     if zero3:
-        fi = choose_fsdp_dim(axes, shape, _axis_size(mesh, ma.fsdp), ti)
+        fi = choose_fsdp_dim(axes, shape, axis_size(mesh, ma.fsdp), ti)
         if fi is not None:
             spec[fi] = ma.fsdp if len(ma.fsdp) > 1 else ma.fsdp[0]
     return P(*spec)
@@ -127,22 +120,9 @@ def grad_spec(name: str, shape, axes, mesh: Mesh, ma: MeshAxes, *,
                       ep_ok=ep_ok)
 
 
-def build_param_shardings(axes_table: Axes, params, cfg: ArchConfig,
-                          mesh: Mesh, ma: MeshAxes, stage: StageConfig
-                          ) -> Dict[str, NamedSharding]:
-    ep_ok = cfg.num_experts > 0 and \
-        cfg.num_experts % max(1, _axis_size(mesh, ma.tp)) == 0
-    out = {}
-    for name, sds in params.items():
-        spec = param_spec(name, sds.shape, axes_table[name], mesh, ma,
-                          zero3=stage.zero >= 3, ep_ok=ep_ok)
-        out[name] = NamedSharding(mesh, spec)
-    return out
-
-
 def make_shard_rules(mesh: Mesh, ma: MeshAxes, sequence_parallel: bool
                      ) -> ShardRules:
-    tp_size = _axis_size(mesh, ma.tp)
+    tp_size = axis_size(mesh, ma.tp)
     mapping: Dict[str, Any] = {
         "dp": ma.dp if len(ma.dp) > 1 else ma.dp[0],
         "tp": ma.tp,
@@ -169,8 +149,8 @@ def cache_specs(caches, mesh: Mesh, ma: MeshAxes, batch: int,
     dp (flash-decoding-style sequence-parallel KV for long_500k).
     Head/state dims shard over tp when divisible.
     """
-    dp_size = _axis_size(mesh, ma.dp)
-    tp_size = _axis_size(mesh, ma.tp)
+    dp_size = axis_size(mesh, ma.dp)
+    tp_size = axis_size(mesh, ma.tp)
     dp_name = ma.dp if len(ma.dp) > 1 else ma.dp[0]
     shard_batch = batch % dp_size == 0 and dp_size > 1
 

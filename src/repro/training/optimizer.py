@@ -17,13 +17,11 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding
-from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core.plan import StageConfig
 from repro.models.common import Axes, Params
-from repro.parallel.sharding import LAYER_AXES, MeshAxes, opt_spec
+from repro.parallel.sharding import LAYER_AXES
 
 
 @dataclass(frozen=True)
@@ -102,36 +100,9 @@ def init_state(params: Params, axes_table: Axes, stage: StageConfig
     }
 
 
-def state_shardings(state, axes_table: Axes, cfg, mesh: Mesh, ma: MeshAxes,
-                    stage: StageConfig) -> Dict[str, Any]:
-    """NamedShardings mirroring the state pytree (host parts pinned_host)."""
-    from repro.parallel.sharding import param_spec
-
-    ep_ok = cfg.num_experts > 0 and cfg.num_experts % mesh.shape.get(
-        ma.tp, 1) == 0 if ma.tp else False
-
-    def pspec(name, sds, zero3):
-        return param_spec(name, sds.shape, axes_table[name], mesh, ma,
-                          zero3=zero3, ep_ok=ep_ok)
-
-    out: Dict[str, Any] = {"step": NamedSharding(mesh, P())}
-    out["params"] = {
-        n: NamedSharding(mesh, pspec(n, s, stage.zero >= 3))
-        for n, s in state["params"].items()}
-    for entry in ("master", "mu", "nu"):
-        e = {}
-        for n, leaf in state[entry].items():
-            spec = opt_spec(n, state["params"][n].shape, axes_table[n], mesh,
-                            ma, zero=stage.zero, ep_ok=ep_ok)
-            if is_split(leaf):
-                hk = compat.host_memory_kind()
-                host = (NamedSharding(mesh, spec, memory_kind=hk)
-                        if hk else NamedSharding(mesh, spec))
-                e[n] = {"host": host, "dev": NamedSharding(mesh, spec)}
-            else:
-                e[n] = NamedSharding(mesh, spec)
-        out[entry] = e
-    return out
+# NOTE: the NamedSharding tree mirroring this state layout is produced by
+# ``repro.lowering.LoweredPlan.state_shardings()`` — the single
+# plan-interpretation pass (docs/plan-lowering.md).
 
 
 # ---------------------------------------------------------------------------

@@ -1,9 +1,14 @@
-"""Step builders: Plan -> jitted train_step / serve_step with shardings.
+"""Step builders: LoweredPlan -> jitted train_step / serve_step.
 
 ``make_train_step`` realizes a single-stage plan (DP x TP x SP, ZeRO-0..3,
 CKPT/AO remat segmentation, WO/OO host offload, optional int8 gradient
 compression, gradient accumulation).  Pipeline (S>1) plans go through
 ``repro.parallel.pipeline``.
+
+Every builder takes an optional pre-computed ``lowered`` (the output of
+``repro.lowering.lower_plan``) and lowers the plan itself otherwise; all
+mesh-axis mapping, sharding tables, and exec-config derivation live in
+that one pass — nothing here interprets the plan directly.
 """
 from __future__ import annotations
 
@@ -13,28 +18,13 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
-from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.configs.base import ArchConfig, ShapeConfig
-from repro.core.plan import Plan, StageConfig
+from repro.core.plan import Plan
+from repro.lowering import LoweredPlan, lower_plan
 from repro.models.common import ExecConfig, use_rules
-from repro.models.zoo import Model, abstract_params, input_specs
-from repro.parallel import sharding as SH
+from repro.models.zoo import Model
 from repro.training import optimizer as OPT
-
-
-def stage_exec_config(plan: Plan, stage: StageConfig, cfg: ArchConfig
-                      ) -> ExecConfig:
-    lyr = stage.layers
-    return ExecConfig(
-        ckpt_layers=min(stage.ckpt_layers, lyr),
-        offload_layers=int(round(stage.ao * min(stage.ckpt_layers, lyr))),
-        remat_policy=plan.remat_policy,
-        attn_impl=plan.attn_impl,
-        use_pallas=plan.use_pallas,
-        sequence_parallel=plan.sequence_parallel,
-    )
 
 
 @dataclass
@@ -67,24 +57,16 @@ def _constrain_device_leaves(tree, shardings):
 
 def make_train_step(model: Model, plan: Plan, mesh: Mesh,
                     adam: OPT.AdamConfig = OPT.AdamConfig(),
-                    donate: bool = True) -> CompiledStep:
+                    donate: bool = True,
+                    lowered: Optional[LoweredPlan] = None) -> CompiledStep:
     assert plan.num_stages == 1, "use parallel.pipeline for S>1 plans"
-    cfg = model.cfg
-    stage = plan.stages[0]
-    ma = SH.MeshAxes.for_plan(mesh, stage.tp)
-    ec = stage_exec_config(plan, stage, cfg)
-    rules = SH.make_shard_rules(mesh, ma, plan.sequence_parallel)
-
-    params_sds, axes_table = abstract_params(cfg)
-    state_abs = OPT.init_state(params_sds, axes_table, stage)
-    st_shardings = OPT.state_shardings(state_abs, axes_table, cfg, mesh, ma,
-                                       stage)
-    ep_ok = cfg.num_experts > 0 and (
-        cfg.num_experts % mesh.shape.get(ma.tp, 1) == 0 if ma.tp else False)
-    gspecs = {n: SH.grad_spec(n, s.shape, axes_table[n], mesh, ma,
-                              zero=stage.zero, ep_ok=ep_ok)
-              for n, s in params_sds.items()}
-    g_shardings = {n: NamedSharding(mesh, sp) for n, sp in gspecs.items()}
+    low = lowered or lower_plan(model.cfg, None, plan, mesh)
+    ec = low.stages[0].exec_cfg
+    rules = low.shard_rules()
+    params_sds = low.params_sds
+    state_abs = OPT.init_state(params_sds, low.axes_table, plan.stages[0])
+    st_shardings = low.state_shardings()
+    g_shardings = low.grad_shardings()
 
     G = plan.grad_accum
 
@@ -147,16 +129,14 @@ def make_train_step(model: Model, plan: Plan, mesh: Mesh,
                         batch_shardings=batch_sh, exec_cfg=ec)
 
 
-def init_sharded_state(model: Model, plan: Plan, mesh: Mesh, rng: jax.Array
+def init_sharded_state(model: Model, plan: Plan, mesh: Mesh, rng: jax.Array,
+                       lowered: Optional[LoweredPlan] = None
                        ) -> Tuple[Dict[str, Any], Any]:
     """Materialize a sharded TrainState on the mesh."""
-    cfg = model.cfg
+    low = lowered or lower_plan(model.cfg, None, plan, mesh)
     stage = plan.stages[0]
-    ma = SH.MeshAxes.for_plan(mesh, stage.tp)
-    params_sds, axes_table = abstract_params(cfg)
-    state_abs = OPT.init_state(params_sds, axes_table, stage)
-    shardings = OPT.state_shardings(state_abs, axes_table, cfg, mesh, ma,
-                                    stage)
+    axes_table = low.axes_table
+    shardings = low.state_shardings()
 
     def build():
         params, _ = model.init(rng)
@@ -181,14 +161,11 @@ def init_sharded_state(model: Model, plan: Plan, mesh: Mesh, rng: jax.Array
 
 
 def make_prefill_step(model: Model, plan: Plan, mesh: Mesh,
-                      return_cache: bool = False) -> CompiledStep:
-    cfg = model.cfg
-    stage = plan.stages[0]
-    ma = SH.MeshAxes.for_plan(mesh, stage.tp)
-    ec = stage_exec_config(plan, stage, cfg).replace(remat_policy="none",
-                                                     ckpt_layers=0,
-                                                     offload_layers=0)
-    rules = SH.make_shard_rules(mesh, ma, plan.sequence_parallel)
+                      return_cache: bool = False,
+                      lowered: Optional[LoweredPlan] = None) -> CompiledStep:
+    low = lowered or lower_plan(model.cfg, None, plan, mesh)
+    ec = low.serve_exec_cfg
+    rules = low.shard_rules()
 
     def prefill(params, batch):
         with use_rules(rules):
@@ -199,23 +176,17 @@ def make_prefill_step(model: Model, plan: Plan, mesh: Mesh,
 
 
 def make_serve_step(model: Model, plan: Plan, mesh: Mesh,
-                    batch: int, max_len: int, donate: bool = True
-                    ) -> CompiledStep:
+                    batch: int, max_len: int, donate: bool = True,
+                    lowered: Optional[LoweredPlan] = None) -> CompiledStep:
     """One-token decode against caches of length max_len."""
-    cfg = model.cfg
-    stage = plan.stages[0]
-    ma = SH.MeshAxes.for_plan(mesh, stage.tp)
-    ec = stage_exec_config(plan, stage, cfg).replace(remat_policy="none",
-                                                     ckpt_layers=0,
-                                                     offload_layers=0)
-    rules = SH.make_shard_rules(mesh, ma, plan.sequence_parallel)
+    low = lowered or lower_plan(model.cfg, None, plan, mesh)
+    rules = low.shard_rules()
 
     cache_dtype = jnp.int8 if plan.kv_cache_dtype == "int8" else jnp.bfloat16
     caches_sds = jax.eval_shape(
         lambda: model.init_caches(batch, max_len, cache_dtype))
-    lead = 2 if cfg.family == "hybrid" else 1
-    cache_sh = SH.cache_specs(caches_sds, mesh, ma, batch, lead_dims=1)
-    ec = ec.replace(cache_update=SH.cache_update_mode(cache_sh, ma))
+    cache_sh, update_mode = low.cache_shardings(caches_sds, batch)
+    ec = low.serve_exec_cfg.replace(cache_update=update_mode)
 
     def serve(params, tokens, caches):
         with use_rules(rules):

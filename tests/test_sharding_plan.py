@@ -6,6 +6,12 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # property tests skip; example tests still run
+    HAVE_HYPOTHESIS = False
+
 from repro import compat
 from repro.configs.base import get_arch
 from repro.core.plan import Plan, StageConfig, megatron_baseline_plan, \
@@ -130,6 +136,42 @@ def test_plan_json_roundtrip():
                           zero=2, ckpt_layers=10, oo=0.5, ao=0.25)
     q = Plan.from_json(p.to_json())
     assert q == p
+
+
+if HAVE_HYPOTHESIS:
+    _ratio = st.floats(0.0, 1.0, allow_nan=False)
+    _stage = st.builds(
+        StageConfig,
+        layers=st.integers(1, 128),
+        micro_batch=st.integers(1, 64),
+        dp=st.integers(1, 256),
+        tp=st.integers(1, 64),
+        zero=st.integers(0, 3),
+        ckpt_layers=st.integers(0, 10**9),
+        wo=_ratio, go=_ratio, oo=_ratio, ao=_ratio,
+    )
+    _plan = st.builds(
+        Plan,
+        grad_accum=st.integers(1, 512),
+        stages=st.lists(_stage, min_size=1, max_size=4).map(tuple),
+        sequence_parallel=st.booleans(),
+        remat_policy=st.sampled_from(["full", "dots"]),
+        attn_impl=st.sampled_from(["naive", "blocked", "pallas"]),
+        use_pallas=st.booleans(),
+        grad_compression=st.booleans(),
+        kv_cache_dtype=st.sampled_from(["bf16", "int8"]),
+    )
+
+    @settings(max_examples=200, deadline=None)
+    @given(_plan)
+    def test_plan_json_roundtrip_property(plan):
+        """LoweredPlan trusts serialized plans: to_json/from_json is the
+        identity for every representable plan (floats ride through
+        repr-exact JSON), and == means field-level equality."""
+        assert Plan.from_json(plan.to_json()) == plan
+else:
+    def test_plan_roundtrip_needs_hypothesis():
+        pytest.importorskip("hypothesis")
 
 
 def test_validate_plan_catches_violations():
