@@ -27,9 +27,12 @@ which is exactly why `auto` thresholds on grid size.
 
 A fifth measurement (`run_memory_agreement`) closes the tuner->runtime
 loop: for every feasible golden-plan config, the symbolic memory
-prediction that selected the plan vs the spec-walked bytes of its
-lowering (`repro.lowering`), asserted within `MEMORY_REL_TOL`.  The
---json document carries the full per-config comparison as the
+prediction that selected the plan vs the layout-evaluated bytes of its
+lowering (`repro.lowering`), asserted within `MEMORY_REL_TOL` — both in
+total AND per term (state / act / transient / logits, each normalized
+by the predicted total so a future accuracy regression is attributable
+to a specific term).  The --json document carries the full per-config
+comparison, including the per-term breakdown, as the
 `predicted_vs_lowered_memory` table (uploaded as a CI artifact).
 
 Run with --smoke for a CI-sized invocation; --json PATH additionally
@@ -269,6 +272,10 @@ def memory_agreement_table() -> List[dict]:
                 "rel_error": mc["rel_error"],
                 "within_tol": mc["within_tol"],
                 "tol": MEMORY_REL_TOL,
+                # per-term breakdown at the lowered peak stage; rel
+                # errors are normalized by the predicted TOTAL bytes
+                # (what the disagreement is worth against the budget)
+                "terms": mc["terms"],
             })
     return table
 
@@ -285,11 +292,17 @@ def run_memory_agreement(table: List[dict] = None) -> List[str]:
             rows.append(emit(name, 0.0, f"skipped={r['skipped']}"))
         else:
             assert r["within_tol"], r   # the lowering contract, enforced
+            per_term = {k: v["rel_error"] for k, v in r["terms"].items()
+                        if k in ("state", "act", "transient", "logits")}
+            for k, rel in per_term.items():     # ... term by term, too
+                assert rel <= r["tol"], (name, k, rel, r)
             rows.append(emit(
                 name, 0.0,
                 f"predicted_GiB={r['predicted_bytes'] / 2**30:.3f} "
                 f"lowered_GiB={r['lowered_bytes'] / 2**30:.3f} "
-                f"rel_error={r['rel_error']:.4f}"))
+                f"rel_error={r['rel_error']:.4f} "
+                + " ".join(f"rel_{k}={v:.4f}"
+                           for k, v in per_term.items())))
     return rows
 
 

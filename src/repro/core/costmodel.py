@@ -36,7 +36,11 @@ from repro.core import symbolic as S
 from repro.core.hardware import V5E, HardwareSpec
 from repro.core.interference import InterferenceModel, pred_intf
 from repro.core.schedule import OVERLAP_SCHEDULE, Candidate, PhaseTraffic
-from repro.core.symbolic import Expr, Sym, ceil_div, smax, smin, where, wrap
+from repro.core.symbolic import (Expr, Sym, ceil_div, rint, smax, smin,
+                                 where, wrap)
+# the shared state-layout derivation (spec-exact shard counts + integer
+# host splits) — jax-free to import; see repro/lowering/state_layout.py
+from repro.lowering.state_layout import symbolic_state_terms
 
 
 # ---------------------------------------------------------------------------
@@ -236,14 +240,22 @@ class StageCostModel:
         inflight = Sym("inflight")
 
         # ---- parameter byte counts (per device) ----------------------------
+        # Memory charges state SPEC-EXACTLY via the shared state-layout
+        # module: per tensor group, the shard count its PartitionSpec
+        # implies (indivisible dims replicate at full size) and the
+        # runtime's integer WO/OO host splits on stacked entries only —
+        # the same derivation LoweredPlan.memory_report() evaluates
+        # concretely, so predicted and lowered bytes agree bitwise.
+        lay = symbolic_state_terms(self.cfg, has_embed=self.has_embed,
+                                   has_head=self.has_head)
+        states = lay["weight"] + lay["grad"] + lay["master"] + lay["opt"]
+        # The *time* terms below keep the idealized uniform division:
+        # collective/DMA message sizes are bandwidth estimates calibrated
+        # as a whole (CostParams), not bytes the runtime must hold.
         n_stage = st.n_layer * L + st.n_shared \
             + (st.n_embed if (self.has_embed or self.has_head) else 0.0)
         n_tp = n_stage / tp                      # TP shards ~everything
-        w_bytes = 2.0 * n_tp / where(z3, dp, 1.0)          # bf16 weights
         g_bytes = 4.0 * n_tp / where(z2, dp, 1.0) * (1.0 - go)  # f32 accum
-        m_bytes = 4.0 * n_tp / where(z1, dp, 1.0) * (1.0 - wo)  # f32 master
-        o_bytes = 8.0 * n_tp / where(z1, dp, 1.0) * (1.0 - oo)  # f32 mu+nu
-        states = w_bytes + g_bytes + m_bytes + o_bytes
 
         # ---- activations ----------------------------------------------------
         sp_div = tp if self.sp else wrap(1.0)
@@ -251,8 +263,12 @@ class StageCostModel:
         act_full_l = 2.0 * st.act_coef_full * st.d_model * tok / sp_div
         act_ckpt_l = 2.0 * st.act_coef_ckpt * st.d_model * tok / sp_div
         ck = smin(ckpt, L)
-        acts_mb = ck * act_ckpt_l * (1.0 - ao) + (L - ck) * act_full_l
+        # AO offloads an INTEGER layer count, exactly the lowering's
+        # ExecConfig.offload_layers = round(ao * ckpt_layers)
+        off = rint(ao * ck)
+        acts_mb = (ck - off) * act_ckpt_l + (L - ck) * act_full_l
         acts = acts_mb * inflight
+        host_acts = off * act_ckpt_l * inflight
 
         # transient working set: one layer's full intermediates during
         # (re)compute + gathered zero-3 params for ~2 layers + attn scratch
@@ -264,6 +280,15 @@ class StageCostModel:
         self.mem_fwd: Expr = states + acts + trans + logits + cp.runtime_reserved
         self.mem_bwd: Expr = states + acts + trans + logits \
             + act_full_l + cp.runtime_reserved  # recompute scratch in bwd
+        # per-term peak-memory breakdown (bwd side == the peak, since bwd
+        # only adds the recompute scratch): evaluated by estimate_plan /
+        # memory_consistency so predicted-vs-lowered disagreement is
+        # attributable to a term, not just a total
+        self.mem_terms: Dict[str, Expr] = {
+            "state": states, "act": acts,
+            "transient": trans + act_full_l, "logits": wrap(logits),
+            "host_state": lay["host"], "host_act": host_acts,
+        }
 
         # ---- compute times (per microbatch, this stage) ---------------------
         flops_fwd = (st.flops_token_layer * L
@@ -316,7 +341,7 @@ class StageCostModel:
         t_mst_out = t_mst_in
         t_go_out = go * grd_shard / host       # per microbatch
         t_go_in = t_go_out
-        t_ao_out = ao * ck * act_ckpt_l / host  # per microbatch fwd
+        t_ao_out = off * act_ckpt_l / host      # per microbatch fwd
         t_ao_in = t_ao_out                      # bwd
 
         # ---- analytic HBM traffic per microbatch (TPU target) --------------
@@ -542,6 +567,19 @@ class StageCostModel:
             self._cache_put(key, out)
         return out
 
+    def evaluate_memory_terms(self, env: Dict[str, Any]
+                              ) -> Dict[str, np.ndarray]:
+        """Per-term peak-memory breakdown (state / act / transient /
+        logits, plus the host_state / host_act bytes the plan moves off
+        device).  The four device terms + runtime_reserved sum to
+        ``mem_bwd`` — the peak side, since bwd only adds scratch on top
+        of fwd.  Diagnostics path (memory_consistency, estimate_plan):
+        recursive evaluation with one shared memo, not the sweep tape."""
+        e = self._env(env)
+        memo: Dict[int, Any] = {}
+        return {k: np.asarray(expr.evaluate(e, memo), np.float64)
+                for k, expr in self.mem_terms.items()}
+
     def evaluate_times(self, env: Dict[str, Any],
                        cache_key: Optional[Tuple] = None
                        ) -> Dict[str, np.ndarray]:
@@ -643,7 +681,7 @@ def estimate_plan(cfg: ArchConfig, shape: ShapeConfig, plan, *,
     """Step-time / memory estimate of a concrete Plan (any S) using the same
     stage model + paper Eq. 1 for the pipeline objective."""
     n_st = len(plan.stages)
-    ts, ds, mems = [], [], []
+    ts, ds, mems, terms = [], [], [], []
     for i, stg in enumerate(plan.stages):
         scm = StageCostModel(cfg, shape.seq_len, hw=hw, cp=cp,
                              has_embed=(i == 0), has_head=(i == n_st - 1),
@@ -658,6 +696,8 @@ def estimate_plan(cfg: ArchConfig, shape: ShapeConfig, plan, *,
         ts.append(float(r["t_stable"][0]))
         ds.append(float(r["d_delta"][0]))
         mems.append(float(r["mem_peak"][0]))
+        terms.append({k: float(np.asarray(v).flat[0]) for k, v in
+                      scm.evaluate_memory_terms(env).items()})
     G = plan.grad_accum
     # paper Eq. 1
     t_step = (G - 1) * max(ts) + sum(ts) + max(
@@ -667,6 +707,7 @@ def estimate_plan(cfg: ArchConfig, shape: ShapeConfig, plan, *,
         "t_step": t_step, "throughput_tokens": tokens / t_step,
         "throughput_samples": shape.global_batch / t_step,
         "mem_peak_max": max(mems), "mem_per_stage": mems,
+        "mem_terms_per_stage": terms,
         "t_stable_per_stage": ts, "d_delta_per_stage": ds,
         "fits": max(mems) <= hw.hbm_bytes * cp.mem_headroom,
     }

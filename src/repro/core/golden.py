@@ -106,6 +106,34 @@ def diff_docs(want: Dict, got: Dict, prefix: str = "") -> List[str]:
     return []
 
 
+def check(base: Optional[Path] = None) -> Dict[Tuple[str, str], List[str]]:
+    """Recompute every golden cell in-memory and diff it against the
+    committed fixture.  Returns ``{(space, arch): [field-level diffs]}``
+    for every stale / missing cell (empty dict == fixtures are current).
+
+    This is the fail-fast guard behind ``tools/regen_golden.py --check``
+    (run in CI): a change that shifts tuner selections without
+    regenerating the fixtures surfaces here as a readable diff instead
+    of as a cryptic sha mismatch later in tests/test_golden_plans.py."""
+    base = base or GOLDEN_DIR
+    problems: Dict[Tuple[str, str], List[str]] = {}
+    for space in GOLDEN_SPACES:
+        for arch in GOLDEN_ARCHS:
+            path = golden_path(space, arch, base)
+            doc = compute_doc(space, arch)
+            if not path.exists():
+                problems[(space, arch)] = [f"missing fixture {path.name}"]
+                continue
+            pinned = json.loads(path.read_text())
+            diffs = diff_docs(pinned["doc"], doc)
+            if not diffs and pinned.get("fingerprint") != fingerprint(doc):
+                diffs = ["fingerprint mismatch with identical doc "
+                         "(fixture written by an older canonicalization?)"]
+            if diffs:
+                problems[(space, arch)] = diffs
+    return problems
+
+
 def regen(base: Optional[Path] = None,
           only: Optional[Tuple[str, str]] = None) -> List[Path]:
     """(Re)write golden fixtures; returns the paths written."""

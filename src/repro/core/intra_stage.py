@@ -13,6 +13,13 @@ The full grid is evaluated in ONE batched substitution into the symbolic
 cost model (no per-config simulation), which is the paper's key tuning-speed
 idea.  A local ratio-refinement pass then descends on the four offload
 ratios around each frontier point (the paper treats them as continuous).
+
+The Eq. 4 feasibility mask is SPEC-EXACT since PR 5: the memory tape
+charges state through the shared state-layout derivation
+(`repro.lowering.state_layout`), so a candidate whose indivisible dims
+replicate (e.g. an odd vocab at tp=8) is charged what the lowered
+program will actually hold — plans selected at the budget boundary are
+trustworthy, the regime this dual-objective optimization lives in.
 """
 from __future__ import annotations
 

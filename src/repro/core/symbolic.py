@@ -202,7 +202,7 @@ _BIN_FNS: Dict[str, Callable] = {
 
 _UN_FNS: Dict[str, Callable] = {
     "ceil": np.ceil, "floor": np.floor, "sqrt": np.sqrt, "log2": np.log2,
-    "abs": np.abs,
+    "abs": np.abs, "rint": np.rint,
 }
 
 # reverse fn-identity -> op-name map (instructions store the bound numpy
@@ -221,7 +221,7 @@ _FN_NAMES: Dict[int, str] = {id(f): n
 # jax for such tapes rather than serving subtly different results.
 BITEXACT_OPS = frozenset(
     {"add", "sub", "mul", "div", "max", "min",
-     "ge", "le", "gt", "lt", "ceil", "floor", "sqrt", "abs"})
+     "ge", "le", "gt", "lt", "ceil", "floor", "sqrt", "abs", "rint"})
 
 
 def _jax_fn_tables(jnp):
@@ -240,7 +240,7 @@ def _jax_fn_tables(jnp):
             "ge": cmp(jnp.greater_equal), "le": cmp(jnp.less_equal),
             "gt": cmp(jnp.greater), "lt": cmp(jnp.less)}
     jun = {"ceil": jnp.ceil, "floor": jnp.floor, "sqrt": jnp.sqrt,
-           "log2": jnp.log2, "abs": jnp.abs}
+           "log2": jnp.log2, "abs": jnp.abs, "rint": jnp.round}
     return jbin, jun
 
 
@@ -345,6 +345,14 @@ def ceil(a) -> Expr:
 
 def ceil_div(a, b) -> Expr:
     return ceil(wrap(a) / wrap(b))
+
+
+def rint(a) -> Expr:
+    """Round half to even — the same correctly-rounded operation as
+    Python ``round()`` / ``np.rint`` / ``jnp.round`` on float64, so the
+    integer split points the runtime computes with ``round()`` are
+    reproducible symbolically, bit for bit."""
+    return UnOp("rint", wrap(a))
 
 
 def where(cond: Expr, a, b) -> Expr:

@@ -20,6 +20,12 @@ baseline system it corresponds to:
 The (S, G) loop itself is executed by the sweep executor in
 core/sweep.py (`TuneSpec.workers`); docs/architecture.md has the full
 dataflow of one tune() call.
+
+Selected plans are memory-trustworthy: the stage model's Eq. 4
+feasibility evaluates the same state-layout derivation the lowering
+bills (`repro.lowering.state_layout`), so `memory_consistency` holds at
+MEMORY_REL_TOL = 0.03 for every selected plan (golden fixtures pin the
+selections; `tools/regen_golden.py --check` keeps them current).
 """
 from __future__ import annotations
 

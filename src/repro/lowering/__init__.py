@@ -9,17 +9,40 @@ single-stage train step, pipeline train step, prefill/serve — consumes the
 resulting :class:`LoweredPlan`; ``repro.parallel.sharding`` stays a pure
 spec library with this package as its only runtime caller.
 
-``LoweredPlan.memory_report()`` recomputes per-device state/activation
-bytes from the lowered tables, closing the loop with the symbolic cost
-model (`docs/plan-lowering.md` documents the contract and the
-predicted-vs-lowered cross-check tolerance).
-"""
-from repro.lowering.lower import (LoweredPlan, LoweredStage, lower_plan,
-                                  plan_mesh_axes)
-from repro.lowering.memory import (MemoryReport, StageMemory,
-                                   memory_consistency, MEMORY_REL_TOL)
+``repro.lowering.state_layout`` is the shared state-layout derivation:
+the symbolic cost model and ``LoweredPlan.memory_report()`` evaluate the
+SAME per-tensor-group shard counts and host/device splits (symbolically
+vs concretely), closing the tuner->runtime memory loop within
+``MEMORY_REL_TOL`` (`docs/plan-lowering.md` documents the contract).
 
-__all__ = [
-    "LoweredPlan", "LoweredStage", "lower_plan", "plan_mesh_axes",
-    "MemoryReport", "StageMemory", "memory_consistency", "MEMORY_REL_TOL",
-]
+The re-exports below resolve lazily (PEP 562): ``state_layout`` and the
+symbolic cost model that imports it must stay usable in numpy-only
+containers, while ``lower``/``memory`` pull jax at import time.
+"""
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:                                    # pragma: no cover
+    from repro.lowering.lower import (LoweredPlan, LoweredStage, lower_plan,
+                                      plan_mesh_axes)
+    from repro.lowering.memory import (MEMORY_REL_TOL, MemoryReport,
+                                       StageMemory, memory_consistency)
+
+_LOWER = ("LoweredPlan", "LoweredStage", "lower_plan", "plan_mesh_axes")
+_MEMORY = ("MemoryReport", "StageMemory", "memory_consistency",
+           "MEMORY_REL_TOL")
+
+__all__ = list(_LOWER + _MEMORY)
+
+
+def __getattr__(name: str):
+    if name in _LOWER:
+        from repro.lowering import lower
+        return getattr(lower, name)
+    if name in _MEMORY:
+        from repro.lowering import memory
+        return getattr(memory, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

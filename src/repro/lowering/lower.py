@@ -201,6 +201,14 @@ class LoweredPlan:
         from repro.lowering.memory import memory_report
         return memory_report(self, **kw)
 
+    def state_layout_terms(self, i: int = 0) -> Dict[str, float]:
+        """Per-device state bytes of stage ``i`` by term — the shared
+        state-layout derivation (`repro.lowering.state_layout`) evaluated
+        concretely against this lowering's actual mesh degrees; the same
+        derivation the tuner's cost model evaluates symbolically."""
+        from repro.lowering.memory import stage_layout_terms
+        return stage_layout_terms(self, i)
+
 
 def _split_table(params_sds, axes_table: Axes, ratio: float) -> Dict[str, int]:
     # lazy: repro.training re-exports its step builders (which import this

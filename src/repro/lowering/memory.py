@@ -1,25 +1,28 @@
-"""Per-device memory accounting from the *lowered* tables.
+"""Per-device memory accounting of a lowered plan.
 
-``memory_report(lowered)`` walks the actual PartitionSpec tables a
-LoweredPlan carries — counting real shard counts per tensor, so
-indivisible dims (MHA head counts, small norms) that replicate are
-charged at full size — plus the ExecConfig's integer remat/offload
-segmentation and the WO/OO host split points.  The activation / transient
-/ logits terms reuse the cost model's analytic per-arch coefficients
-(``arch_stats``), so the report and the symbolic predictor share one
-activation model and differ only where the runtime genuinely differs
-from the symbolic idealization:
+``memory_report(lowered)`` charges each train stage's model state by
+evaluating the shared state-layout module
+(:mod:`repro.lowering.state_layout`) **concretely** — the same per-group
+shard counts, replication sets, and integer WO/OO host splits the
+symbolic cost model evaluates over the tuner's knob symbols.  Activation
+/ transient / logits terms reuse the cost model's analytic per-arch
+coefficients (``arch_stats``) with the lowering's integer remat/offload
+segmentation.  Since PR 5 the predictor and the report are two
+evaluations of ONE derivation, so they agree bitwise wherever the plan
+and the mesh agree (and ``MEMORY_REL_TOL`` is a tight guard, not an
+apology for structural divergence).
 
-* spec-exact state bytes vs the uniform ``n/tp`` division,
-* integer layer counts (``round(ao*ckpt)`` offloaded layers) vs
-  continuous ratios,
-* host offload restricted to stacked-layer entries (the runtime cannot
-  split non-stacked tensors) vs ratios applied to all state.
+``_state_walk`` — the exact walk over the lowered PartitionSpec tables —
+is retained as the independent oracle: ``stage_state_bytes`` (dryrun)
+uses it, and tests assert the layout evaluation reproduces it, which
+pins the layout module to what ``param_spec``/``opt_spec`` actually
+emit.
 
-``memory_consistency`` quantifies exactly that gap against
-``estimate_plan`` for a concrete (cfg, shape, plan); the golden-plan
-configs must agree within ``MEMORY_REL_TOL`` (asserted in
-tests/test_lowering.py, reported per config by
+``memory_consistency`` quantifies the remaining predicted-vs-lowered gap
+for one concrete (cfg, shape, plan), with a per-term breakdown (state /
+act / transient / logits) so a future regression is attributable; the
+golden-plan configs must agree within ``MEMORY_REL_TOL`` (asserted in
+tests/test_lowering.py and, per config, by
 ``benchmarks/tuning_time.py --json``).
 """
 from __future__ import annotations
@@ -30,25 +33,23 @@ from typing import Any, Dict, List, TYPE_CHECKING
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.hardware import V5E, HardwareSpec
-from repro.parallel.sharding import LAYER_AXES
+from repro.lowering.state_layout import (concrete_state_terms, param_class
+                                         as _param_class)
+from repro.parallel import sharding as SH
 
 if TYPE_CHECKING:                                    # pragma: no cover
     from repro.lowering.lower import LoweredPlan, LoweredStage
 
-# Stated tolerance of the predicted-vs-lowered cross-check.  The dominant
-# divergence on the golden-plan configs is the first one in the module
-# docstring: granite-3-8b's vocab (49155) is not divisible by the plan's
-# tp=8, so the lowered specs replicate the embedding — and its grads,
-# master, and (non-offloadable, non-stacked) mu/nu — where the symbolic
-# model divides uniformly by tp and offloads by ratio (~3.0 GiB on a
-# ~14.7 GiB prediction; observed rel error 0.207, see the
-# predicted_vs_lowered_memory table in benchmarks/tuning_time.py --json).
-# Tightening this requires teaching the cost model spec-exact state
-# accounting, which would change tuner selections and is pinned by the
-# golden fixtures — tracked as a ROADMAP open item.
-MEMORY_REL_TOL = 0.25
-
-_SHARED_PREFIXES = ("shared/", "shared_attn/")
+# Tolerance of the predicted-vs-lowered cross-check.  With the shared
+# state-layout derivation (spec-exact shard counts incl. indivisible-dim
+# replication, integer WO/OO/AO splits) the two sides agree bitwise on
+# matched plan/mesh pairs — granite-3-8b's indivisible vocab at tp=8,
+# formerly a 0.207 rel error, is now exact.  The 3% headroom covers what
+# is genuinely NOT shared yet: the XLA reserved-bytes constant is an
+# estimate, and dryrun views may lower a plan onto a mesh whose axis
+# sizes differ from the plan's (the layout then counts the real mesh,
+# the predictor the plan).  Tracked as ROADMAP follow-ups.
+MEMORY_REL_TOL = 0.03
 
 
 def _nshards(mesh, spec) -> int:
@@ -122,17 +123,11 @@ class MemoryReport:
         }
 
 
-def _param_class(name: str, axes) -> str:
-    if axes and axes[0] in LAYER_AXES:
-        return "stacked"
-    if name.startswith(_SHARED_PREFIXES):
-        return "shared"
-    return "embed"
-
-
 def _state_walk(lowered: "LoweredPlan", st: "LoweredStage",
                 layer_frac: float) -> Dict[str, float]:
-    """Spec-exact per-device state bytes of one stage.
+    """Spec-exact per-device state bytes of one stage, walked from the
+    ACTUAL PartitionSpec tables — the oracle the state-layout module is
+    tested against (tests/test_state_layout.py).
 
     Stacked params contribute their ``layer_frac`` share (this stage's
     layers / total); shared-block params replicate to every stage;
@@ -180,9 +175,28 @@ def stage_state_bytes(lowered: "LoweredPlan", i: int = 0) -> float:
     return s["weight"] + s["grad"] + s["master"] + s["opt"]
 
 
+def stage_layout_terms(lowered: "LoweredPlan", i: int = 0
+                       ) -> Dict[str, float]:
+    """The shared state layout evaluated concretely for one lowered
+    stage: tp/fsdp degrees come from the stage's ACTUAL MeshAxes (so
+    folded tp=1 meshes and production views count the real mesh)."""
+    st = lowered.stages[i]
+    sc = st.stage
+    return concrete_state_terms(
+        lowered.cfg,
+        tp_size=SH.axis_size(lowered.mesh, st.mesh_axes.tp),
+        fsdp_size=SH.axis_size(lowered.mesh, st.mesh_axes.fsdp),
+        zero=sc.zero, wo=sc.wo, oo=sc.oo, layers=sc.layers,
+        total_layers=lowered.plan.total_layers,
+        has_embed=st.has_embed, has_head=st.has_head)
+
+
 def memory_report(lowered: "LoweredPlan", *, hw: HardwareSpec = V5E,
                   cp=None) -> MemoryReport:
-    """Actual per-device bytes from the lowered tables (module docstring)."""
+    """Actual per-device bytes of the lowered plan (module docstring):
+    state via the shared layout, activations/transients via the cost
+    model's analytic coefficients + the ExecConfig's integer
+    segmentation."""
     from repro.core.costmodel import CostParams, arch_stats
     cp = cp or CostParams()
     shape = lowered.shape
@@ -196,11 +210,10 @@ def memory_report(lowered: "LoweredPlan", *, hw: HardwareSpec = V5E,
     if shape.kind != "train":
         return _serve_report(lowered, stt, shape, budget, cp)
 
-    total_layers = plan.total_layers
     stages: List[StageMemory] = []
     for st in lowered.stages:
         sc, ec = st.stage, st.exec_cfg
-        state = _state_walk(lowered, st, sc.layers / total_layers)
+        state = stage_layout_terms(lowered, st.index)
         tok = sc.micro_batch * shape.seq_len
         sp_div = sc.tp if plan.sequence_parallel else 1
         act_full_l = 2.0 * stt.act_coef_full * stt.d_model * tok / sp_div
@@ -245,7 +258,6 @@ def _serve_report(lowered: "LoweredPlan", stt, shape: ShapeConfig,
         import jax
         import jax.numpy as jnp
         from repro.models import build_model
-        from repro.parallel import sharding as SH
         model = build_model(lowered.cfg)
         cdt = (jnp.int8 if lowered.plan.kv_cache_dtype == "int8"
                else jnp.bfloat16)
@@ -276,7 +288,12 @@ def memory_consistency(cfg: ArchConfig, shape: ShapeConfig, plan, *,
     per-device peak bytes for one concrete plan, on an abstract mesh
     shaped exactly like the plan.  This is the tuner->runtime consistency
     check: the cost model that *selected* the plan and the lowering that
-    *executes* it must agree on what the plan costs."""
+    *executes* it must agree on what the plan costs.
+
+    ``terms`` breaks the gap down per memory term at the lowered peak
+    stage.  Per-term rel errors are normalized by the predicted TOTAL
+    (how much of the budget that term's disagreement is worth), so tiny
+    terms cannot blow the ratio up."""
     from repro import compat
     from repro.core.costmodel import estimate_plan
     from repro.lowering.lower import lower_plan
@@ -292,11 +309,26 @@ def memory_consistency(cfg: ArchConfig, shape: ShapeConfig, plan, *,
     predicted = float(est["mem_peak_max"])
     lowered_b = float(rep.peak_bytes)
     rel = abs(lowered_b - predicted) / max(predicted, 1.0)
+
+    peak_i = max(range(len(rep.stages)),
+                 key=lambda i: rep.stages[i].device_bytes)
+    ps = rep.stages[peak_i]
+    pt = est["mem_terms_per_stage"][peak_i]
+    lowered_terms = {"state": ps.state_bytes, "act": ps.act_bytes,
+                     "transient": ps.transient_bytes,
+                     "logits": ps.logits_bytes,
+                     "host_state": ps.host_state_bytes,
+                     "host_act": ps.host_act_bytes}
+    terms = {k: {"predicted": float(pt[k]), "lowered": float(v),
+                 "rel_error": abs(v - pt[k]) / max(predicted, 1.0)}
+             for k, v in lowered_terms.items()}
     return {
         "predicted_bytes": predicted,
         "lowered_bytes": lowered_b,
         "rel_error": rel,
         "within_tol": rel <= MEMORY_REL_TOL,
+        "terms": terms,
+        "peak_stage": peak_i,
         "predicted_per_stage": [float(x) for x in est["mem_per_stage"]],
         "lowered_per_stage": [s.device_bytes for s in rep.stages],
     }

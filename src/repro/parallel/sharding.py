@@ -21,12 +21,14 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.models.common import ShardRules
-
-# logical axes eligible for tensor parallelism, in priority order
-TP_PRIORITY = ("expert", "mlp", "heads", "inner2", "inner", "kv_heads",
-               "vocab")
-# leading stacked-scan dims — never sharded (scan slices them)
-LAYER_AXES = ("layers", "layers1", "layers2")
+# The logical-axis constants and physical-dim choosers are owned by the
+# shared state-layout module (`repro.lowering.state_layout`), which both
+# this spec library and the symbolic cost model evaluate — one
+# implementation decides the runtime's PartitionSpecs AND the tuner's
+# shard counts, so they cannot drift.  Re-exported here for callers.
+from repro.lowering.state_layout import (LAYER_AXES,  # noqa: F401
+                                         TP_PRIORITY, choose_fsdp_dim,
+                                         choose_tp_dim)
 
 
 @dataclass(frozen=True)
@@ -54,42 +56,6 @@ def axis_size(mesh: Mesh, axes) -> int:
     for a in axes:
         n *= mesh.shape[a]
     return n
-
-
-def choose_tp_dim(axes: Sequence[Optional[str]], shape: Sequence[int],
-                  tp_size: int, ep_ok: bool) -> Optional[int]:
-    """Pick the dim to shard over the model axis (None -> replicate)."""
-    if tp_size <= 1:
-        return None
-    best = None
-    best_rank = len(TP_PRIORITY)
-    for i, (ax, dim) in enumerate(zip(axes, shape)):
-        if ax is None or ax in LAYER_AXES or ax not in TP_PRIORITY:
-            continue
-        if ax == "expert" and not ep_ok:
-            continue
-        if dim % tp_size != 0:
-            continue
-        rank = TP_PRIORITY.index(ax)
-        if rank < best_rank:
-            best, best_rank = i, rank
-    return best
-
-
-def choose_fsdp_dim(axes: Sequence[Optional[str]], shape: Sequence[int],
-                    fsdp_size: int, taken: Optional[int]) -> Optional[int]:
-    """Largest free dim divisible by the ZeRO axis size."""
-    if fsdp_size <= 1:
-        return None
-    best, best_dim = None, 0
-    for i, (ax, dim) in enumerate(zip(axes, shape)):
-        if i == taken or ax in LAYER_AXES:
-            continue
-        if dim % fsdp_size != 0:
-            continue
-        if dim > best_dim:
-            best, best_dim = i, dim
-    return best
 
 
 def param_spec(name: str, shape: Sequence[int], axes: Sequence[Optional[str]],

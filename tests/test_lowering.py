@@ -20,7 +20,7 @@ import sys
 import pytest
 
 from repro import compat
-from repro.configs.base import ShapeConfig, get_arch
+from repro.configs.base import ShapeConfig, get_arch, list_archs
 from repro.core import golden
 from repro.core.plan import Plan, StageConfig, single_stage_plan
 from repro.lowering import (MEMORY_REL_TOL, lower_plan, memory_consistency,
@@ -261,19 +261,58 @@ def test_serve_lowering_matches_spec_library():
 _GOLDEN_SHAPE = ShapeConfig("golden", 2048, 16, "train")
 
 
+def test_memory_rel_tol_is_tight():
+    """The shared state-layout derivation (PR 5) makes predicted and
+    lowered memory agree bitwise on matched plan/mesh pairs; the stated
+    tolerance is a tight 3% guard (XLA reserved-bytes estimate, plan/mesh
+    mismatch in dryrun views), not an apology for structural divergence.
+    Loosening it again is a regression."""
+    assert MEMORY_REL_TOL == 0.03
+
+
 @pytest.mark.parametrize("space,arch", CASES,
                          ids=[f"{s}-{a}" for s, a in CASES])
 def test_predicted_vs_lowered_memory(space, arch):
     """StageCostModel/estimate_plan memory predictions agree with
     LoweredPlan.memory_report() within MEMORY_REL_TOL for every golden
     cell (fixture plan where feasible, the preset representative
-    otherwise)."""
+    otherwise) — including the per-term breakdown."""
     plan = golden_plan_for(space, arch)
     mc = memory_consistency(get_arch(arch), _GOLDEN_SHAPE, plan)
     assert mc["within_tol"], (
         f"predicted {mc['predicted_bytes'] / 2**30:.2f} GiB vs lowered "
         f"{mc['lowered_bytes'] / 2**30:.2f} GiB: rel error "
         f"{mc['rel_error']:.3f} > {MEMORY_REL_TOL}")
+    for term in ("state", "act", "transient", "logits"):
+        assert mc["terms"][term]["rel_error"] <= MEMORY_REL_TOL, \
+            (term, mc["terms"][term])
+
+
+# every zoo arch x every SPACES preset, on a preset-representative plan
+# (the tuner only pins golden plans for 2 archs; the consistency contract
+# must hold for any legal plan on any arch)
+_ZOO_CASES = [(s, a) for s in golden.GOLDEN_SPACES for a in list_archs()]
+
+
+@pytest.mark.parametrize("space,arch", _ZOO_CASES,
+                         ids=[f"{s}-{a}" for s, a in _ZOO_CASES])
+def test_predicted_vs_lowered_memory_zoo(space, arch):
+    """memory_consistency holds at MEMORY_REL_TOL across the FULL arch
+    zoo for each preset's representative plan — indivisible head/vocab
+    dims, MoE expert grids, shared blocks, enc-dec stacks and all."""
+    cfg = get_arch(arch)
+    kw = dict(_SPACE_FALLBACK[space])
+    ck = kw.pop("ckpt_layers", cfg.num_layers)
+    try:
+        plan = single_stage_plan(cfg.num_layers, dp=2, tp=4, micro_batch=2,
+                                 grad_accum=4,
+                                 ckpt_layers=min(ck, cfg.num_layers), **kw)
+    except (ValueError, AssertionError) as e:        # pragma: no cover
+        pytest.skip(f"infeasible cell for {arch}: {e}")
+    mc = memory_consistency(cfg, _GOLDEN_SHAPE, plan)
+    assert mc["rel_error"] <= MEMORY_REL_TOL, (
+        f"rel error {mc['rel_error']:.3f} > {MEMORY_REL_TOL}: "
+        f"{mc['terms']}")
 
 
 def test_memory_report_offload_moves_bytes_to_host():

@@ -1,5 +1,6 @@
 #!/usr/bin/env python
-"""Regenerate the golden-plan regression fixtures under tests/golden/.
+"""Regenerate or verify the golden-plan regression fixtures under
+tests/golden/.
 
 Run after an INTENTIONAL change to the cost model / schedule / tuner and
 commit the rewritten fixtures together with that change:
@@ -7,8 +8,15 @@ commit the rewritten fixtures together with that change:
     PYTHONPATH=src python tools/regen_golden.py            # all cells
     PYTHONPATH=src python tools/regen_golden.py --only mist:granite-3-8b
 
-``tests/test_golden_plans.py`` fails with a field-level diff whenever a
-recomputed plan drifts from these fixtures.
+``--check`` regenerates every cell in-memory only, diffs it against the
+committed fixtures, and exits nonzero on drift — CI runs this so a
+model/tuner change that forgot to regenerate fixtures fails fast with a
+readable field-level diff instead of a cryptic sha mismatch:
+
+    PYTHONPATH=src python tools/regen_golden.py --check
+
+``tests/test_golden_plans.py`` fails with the same field-level diff
+whenever a recomputed plan drifts from these fixtures.
 """
 import argparse
 import sys
@@ -23,7 +31,28 @@ def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", metavar="SPACE:ARCH",
                     help="regenerate a single cell, e.g. mist:granite-3-8b")
+    ap.add_argument("--check", action="store_true",
+                    help="verify fixtures against an in-memory regen; "
+                         "write nothing, exit 1 on drift")
     args = ap.parse_args()
+    if args.check:
+        if args.only:
+            ap.error("--check verifies every cell; drop --only")
+        problems = golden.check()
+        if not problems:
+            n = len(golden.GOLDEN_SPACES) * len(golden.GOLDEN_ARCHS)
+            print(f"{n} golden fixture(s) up to date")
+            return 0
+        for (space, arch), diffs in sorted(problems.items()):
+            print(f"STALE {space}:{arch}")
+            for d in diffs[:20]:
+                print(f"  {d}")
+            if len(diffs) > 20:
+                print(f"  ... {len(diffs) - 20} more")
+        print(f"{len(problems)} golden fixture(s) out of date; rerun "
+              f"'PYTHONPATH=src python tools/regen_golden.py' and commit "
+              f"the diff with the change that caused it")
+        return 1
     only = None
     if args.only:
         space, _, arch = args.only.partition(":")
