@@ -1,0 +1,187 @@
+"""Kernel-config tuning: the tile/block dimension of the plan space
+(docs/kernel-tuning.md), measured end to end.
+
+Four measurement groups:
+
+  * **frozen-default byte-identity** — with the kernel dimension frozen
+    to the default tuple (the default ``TuneSpec``), golden cells
+    reproduce their committed fixtures fingerprint-for-fingerprint, and
+    passing ``kernel_grid=DEFAULT_KERNEL_GRID`` explicitly selects a
+    byte-identical plan.  The kernel machinery must be invisible until
+    actually swept — this is the benchmark-level twin of
+    ``tools/regen_golden.py --check``.
+  * **tuned vs default** — the same cell swept with
+    ``kernel_tune=True``: the tuner's objective with the kernel
+    dimension open vs frozen (the default tuple rides in every legal
+    grid, so tuned <= default is asserted, not hoped), the selected
+    tile tuple, and the roofline-predicted per-op kernel times for
+    both.
+  * **verify-by-compile** — every tuner-selected config is instantiated
+    through the real Pallas kernels (``interpret=True`` off-TPU) via
+    ``repro.kernels.autotune.verify_config``; a config that fails to
+    compile fails the benchmark.
+  * **measured kernel step time** — ``bench_config`` medians through
+    the real kernels for the default vs the selected tiles (host
+    interpret mode off-TPU: absolute numbers are simulation-speed, the
+    tile-to-tile *ratio* is the signal; on a TPU host the same rows are
+    hardware medians).
+
+Run with --smoke for a CI-sized invocation (reduced golden arch, one
+fixture cell, one bench rep); --json PATH additionally writes the rows
+as a JSON document (uploaded as a CI artifact next to the tuning-time
+report).
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from typing import List
+
+from benchmarks.common import emit
+from repro.configs.base import get_arch
+from repro.core import golden
+from repro.core.plan import DEFAULT_KERNEL_CONFIG, KernelConfig
+from repro.core.schedule import DEFAULT_KERNEL_GRID
+from repro.core.tuner import MistTuner, TuneSpec
+
+SMOKE_CELL = ("megatron", "granite-3-8b")
+
+
+def _spec(arch, **kw) -> TuneSpec:
+    """The golden workload (core/golden.py) on a given arch object."""
+    return TuneSpec(arch=arch, **{**golden._WORKLOAD, **kw})
+
+
+def run_frozen_identity(cells) -> List[str]:
+    """Kernel knobs frozen to defaults -> committed fixtures, byte for
+    byte (fingerprint over the canonicalized tuner document)."""
+    rows = []
+    for space, arch in cells:
+        path = golden.golden_path(space, arch)
+        if not path.exists():
+            rows.append(emit(f"kernel_tuning/frozen_identity/{space}_{arch}",
+                             0.0, "skipped=no_fixture"))
+            continue
+        want = json.loads(path.read_text())["fingerprint"]
+        t0 = time.perf_counter()
+        doc = golden.compute_doc(space, arch)
+        dt = time.perf_counter() - t0
+        got = golden.fingerprint(doc)
+        assert got == want, (
+            f"frozen-default plan drifted from fixture for {space}/{arch}: "
+            f"{got} != {want}")
+        rows.append(emit(f"kernel_tuning/frozen_identity/{space}_{arch}",
+                         dt * 1e6, f"seconds={dt:.2f} fingerprint_match=True"))
+    return rows
+
+
+def run_explicit_default_grid(arch) -> List[str]:
+    """kernel_grid=DEFAULT_KERNEL_GRID is the same sweep as not
+    mentioning kernels at all — byte-identical plan JSON."""
+    r0 = MistTuner(_spec(arch)).tune()
+    r1 = MistTuner(_spec(arch, kernel_grid=DEFAULT_KERNEL_GRID)).tune()
+    assert r0.objective == r1.objective \
+        and r0.plan.to_json() == r1.plan.to_json(), \
+        "explicit default kernel grid changed the selected plan"
+    return [emit("kernel_tuning/explicit_default_grid", 0.0,
+                 f"identical_plans=True arch={arch.name}")]
+
+
+def run_tuned_vs_default(arch, *, verify_seq: int = 512) -> List[str]:
+    """Open the kernel dimension on one golden cell: tuned objective vs
+    frozen default, selected tiles, roofline per-op times, and the
+    verify-by-compile gate on whatever the tuner picked."""
+    from repro.kernels.autotune import predict_times, verify_config
+    t0 = time.perf_counter()
+    base = MistTuner(_spec(arch)).tune()
+    t_base = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    tuned = MistTuner(_spec(arch, kernel_tune=True)).tune()
+    t_tuned = time.perf_counter() - t0
+    assert tuned.objective <= base.objective, \
+        "kernel sweep worsened the objective (default rides in the grid)"
+    imp = (base.objective - tuned.objective) / base.objective
+    kc = tuned.plan.kernel
+    seq = _spec(arch).seq_len
+    st = tuned.plan.stages[0]
+    pt_def = predict_times(arch, seq_len=seq, config=DEFAULT_KERNEL_CONFIG,
+                           b=float(st.micro_batch), tp=float(st.tp))
+    pt_sel = predict_times(arch, seq_len=seq, config=kc,
+                           b=float(st.micro_batch), tp=float(st.tp))
+    verify_config(arch, seq_len=verify_seq, config=kc)
+    return [
+        emit("kernel_tuning/objective_default", base.objective * 1e6,
+             f"tune_seconds={t_base:.2f} arch={arch.name}"),
+        emit("kernel_tuning/objective_tuned", tuned.objective * 1e6,
+             f"tune_seconds={t_tuned:.2f} config={kc.astuple()}"),
+        emit("kernel_tuning/objective_improvement", 0.0,
+             f"{imp * 100:.2f}% (0% means the default tuple won)"),
+        emit("kernel_tuning/roofline_default_us",
+             pt_def["total"] * 1e6,
+             " ".join(f"{k}={v * 1e6:.2f}us" for k, v in pt_def.items())),
+        emit("kernel_tuning/roofline_tuned_us",
+             pt_sel["total"] * 1e6,
+             " ".join(f"{k}={v * 1e6:.2f}us" for k, v in pt_sel.items())),
+        emit("kernel_tuning/verify_compile", 0.0,
+             f"config={kc.astuple()} pallas_interpret_ok=True"),
+    ]
+
+
+def run_kernel_bench(arch, *, seq: int = 512, reps: int = 1) -> List[str]:
+    """Measured per-op medians through the real kernels, default tiles vs
+    the best non-default legal tuple (host interpret off-TPU)."""
+    from repro.kernels.autotune import bench_config, legal_kernel_grid
+    grid = legal_kernel_grid(arch, seq_len=seq)
+    alt = next((t for t in grid if t != DEFAULT_KERNEL_CONFIG.astuple()),
+               None)
+    rows = []
+    m_def = bench_config(arch, seq_len=seq, config=DEFAULT_KERNEL_CONFIG,
+                         reps=reps)
+    rows.append(emit("kernel_tuning/bench_default",
+                     sum(m_def.values()) * 1e6,
+                     " ".join(f"{k}={v * 1e6:.1f}us"
+                              for k, v in sorted(m_def.items()))))
+    if alt is not None:
+        m_alt = bench_config(arch, seq_len=seq, config=KernelConfig(*alt),
+                             reps=reps)
+        rows.append(emit("kernel_tuning/bench_best_alt",
+                         sum(m_alt.values()) * 1e6,
+                         f"config={alt} " +
+                         " ".join(f"{k}={v * 1e6:.1f}us"
+                                  for k, v in sorted(m_alt.items()))))
+    return rows
+
+
+def run(smoke: bool = False) -> List[str]:
+    if smoke:
+        arch = get_arch("granite-3-8b").reduced()
+        return (run_frozen_identity([SMOKE_CELL])
+                + run_explicit_default_grid(arch)
+                + run_tuned_vs_default(arch, verify_seq=512)
+                + run_kernel_bench(arch, seq=512, reps=1))
+    cells = [(s, a) for s in golden.GOLDEN_SPACES
+             for a in golden.GOLDEN_ARCHS]
+    arch = get_arch("granite-3-8b")
+    return (run_frozen_identity(cells)
+            + run_explicit_default_grid(get_arch("granite-3-8b").reduced())
+            + run_tuned_vs_default(arch)
+            + run_kernel_bench(arch, seq=2048, reps=3))
+
+
+def rows_to_json(rows: List[str]) -> dict:
+    out = []
+    for r in rows:
+        name, value, notes = r.split(",", 2)
+        out.append({"name": name, "us_per_call": float(value),
+                    "notes": notes})
+    return {"benchmark": "kernel_tuning", "rows": out}
+
+
+if __name__ == "__main__":
+    rows = run(smoke="--smoke" in sys.argv)
+    if "--json" in sys.argv:
+        path = sys.argv[sys.argv.index("--json") + 1]
+        with open(path, "w") as f:
+            json.dump(rows_to_json(rows), f, indent=2)
+        print(f"wrote {path}")

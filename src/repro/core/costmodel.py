@@ -33,8 +33,12 @@ import numpy as np
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core import symbolic as S
+from repro.core.costmodel_params import (KERNEL_SYMBOLIC_OPS, KernelCoeffs,
+                                         kernel_time_terms,
+                                         kernel_vmem_terms, ssd_dims)
 from repro.core.hardware import V5E, HardwareSpec
 from repro.core.interference import InterferenceModel, pred_intf
+from repro.core.plan import DEFAULT_KERNEL_CONFIG
 from repro.core.schedule import OVERLAP_SCHEDULE, Candidate, PhaseTraffic
 from repro.core.symbolic import (Expr, Sym, ceil_div, rint, smax, smin,
                                  where, wrap)
@@ -59,6 +63,9 @@ class CostParams:
     coll_latency_us: float = 12.0    # per-collective launch latency
     mem_headroom: float = 0.92       # usable fraction of HBM
     runtime_reserved: float = 0.75 * 2**30  # XLA runtime + fragmentation
+    # per-kernel roofline coefficients (the kernel-config plan dimension);
+    # calibratable from kernels.autotune bench measurements
+    kernels: KernelCoeffs = KernelCoeffs()
 
 
 # ---------------------------------------------------------------------------
@@ -180,7 +187,8 @@ def arch_stats(cfg: ArchConfig) -> ArchStats:
 # ---------------------------------------------------------------------------
 
 SYMS = ("b", "dp", "tp", "L", "G", "ckpt", "z1", "z2", "z3",
-        "wo", "go", "oo", "ao", "inflight")
+        "wo", "go", "oo", "ao", "inflight",
+        "qb", "kvb", "rnb", "sch")
 
 BACKENDS = ("numpy", "jax", "auto")
 
@@ -290,6 +298,19 @@ class StageCostModel:
             "host_state": lay["host"], "host_act": host_acts,
         }
 
+        # ---- kernel VMEM working set (grid legality, not HBM peak) ----------
+        # Tiles must fit on-core VMEM; the budget is floored at the default
+        # config's own working set so the default tiles are feasible by
+        # construction (they are today's behaviour) and the mask can only
+        # prune configs strictly larger than both the budget and the default.
+        self.vmem_peak: Expr = self._kernel_vmem(
+            Sym("qb"), Sym("kvb"), Sym("rnb"), Sym("sch"))
+        vmem_default = self._kernel_vmem(
+            *(float(v) for v in DEFAULT_KERNEL_CONFIG.astuple()),
+            concrete=True)
+        self.vmem_budget_bytes: float = max(float(hw.vmem_bytes),
+                                            float(vmem_default))
+
         # ---- compute times (per microbatch, this stage) ---------------------
         flops_fwd = (st.flops_token_layer * L
                      + st.attn_flops_coef * seq * L) * tok / tp
@@ -299,6 +320,28 @@ class StageCostModel:
         eff = cp.mxu_eff_floor + (cp.mxu_eff_peak - cp.mxu_eff_floor) * (
             tok / (tok + cp.mxu_sat_tokens))
         t_fwd = flops_fwd * (1.0 + cp.vpu_tax) / (hw.peak_flops_bf16 * eff)
+
+        # ---- kernel-config roofline delta (tile/block knobs) ----------------
+        # The kernel dimension is priced as a DELTA against the default
+        # config: the same shared formula (costmodel_params.kernel_time_terms)
+        # is built once over the knob symbols (qb/kvb/rnb/sch) and once over
+        # the default constants.  At the default bindings both sides run the
+        # identical op sequence on equal float64 values, so the delta is
+        # exactly 0.0 and t_fwd (hence every phase sum, t_stable, d_delta,
+        # and the golden objectives) is bitwise unchanged — the term only
+        # moves candidates when the kernel dimension is actually swept.
+        t_kernel_sym = self._kernel_time(
+            b, tp, sp_div, Sym("qb"), Sym("kvb"), Sym("rnb"), Sym("sch"), L)
+        t_kernel_def = self._kernel_time(
+            b, tp, sp_div, *(wrap(float(v)) for v in
+                             DEFAULT_KERNEL_CONFIG.astuple()), L)
+        self.kernel_time_delta: Expr = t_kernel_sym - t_kernel_def
+        # floor at a fraction of the base estimate: the delta is a roofline
+        # *correction*, never allowed to swallow the base matmul time (a
+        # mis-calibrated coefficient must not produce negative step times).
+        # At the defaults delta == 0 and t_fwd > 0.1 * t_fwd, so the max
+        # passes the base through bitwise and goldens are unaffected.
+        t_fwd = smax(t_fwd + self.kernel_time_delta, 0.1 * t_fwd)
         t_bwd = 2.0 * t_fwd
         t_recompute = t_fwd * (ck / smax(L, 1.0))
 
@@ -388,9 +431,12 @@ class StageCostModel:
                 outputs[f"phase:{p.name}:{chan}"] = expr
         self.tape = S.compile_tape(outputs)
         # split tapes: memory feasibility is checked on the full candidate
-        # grid, runtime only on the feasible survivors (tune_stage)
+        # grid, runtime only on the feasible survivors (tune_stage); the
+        # kernel VMEM legality rides on the memory tape so one pass masks
+        # both HBM and VMEM infeasibility
         self.tape_mem = S.compile_tape({"mem_fwd": self.mem_fwd,
-                                        "mem_bwd": self.mem_bwd})
+                                        "mem_bwd": self.mem_bwd,
+                                        "vmem_peak": self.vmem_peak})
         self.tape_time = S.compile_tape(
             {k: v for k, v in outputs.items()
              if k not in ("mem_fwd", "mem_bwd")})
@@ -412,6 +458,42 @@ class StageCostModel:
         self._tape_cache: Dict[Tuple, Dict[str, Any]] = {}
         self.cache_hits = 0
         self.cache_misses = 0
+
+    def _kernel_time(self, b, tp, sp_div, qb, kvb, rnb, sch, L) -> Expr:
+        """Stage kernel time per microbatch for one (qb, kvb, rnb, sch)
+        binding — the shared roofline formula gated to the ops this arch
+        actually runs, times the stage's layer count."""
+        st, hw, kc = self.st, self.hw, self.cp.kernels
+        sd_h, sd_p, sd_n = ssd_dims(self.cfg)
+        terms = kernel_time_terms(
+            seq=self.seq, b=b, tp=tp, sp_div=sp_div, qb=qb, kvb=kvb,
+            rnb=rnb, sch=sch, num_heads=st.num_heads, head_dim=st.head_dim,
+            d_model=st.d_model, ssd_heads=sd_h, ssd_head_dim=sd_p,
+            ssd_state=sd_n, hbm_bw=hw.hbm_bw,
+            peak_flops=hw.peak_flops_bf16, kc=kc, ops=KERNEL_SYMBOLIC_OPS)
+        per_layer = wrap(terms["rms"])
+        if st.attn_layers_frac:
+            per_layer = per_layer + st.attn_layers_frac * terms["attn"]
+        if sd_h:
+            per_layer = per_layer + terms["ssd"]
+        return L * per_layer
+
+    def _kernel_vmem(self, qb, kvb, rnb, sch, concrete: bool = False):
+        """Worst-op VMEM working set; Expr over the knob symbols, or a
+        float (``concrete=True``) for the default-config budget floor."""
+        from repro.core.costmodel_params import KERNEL_CONCRETE_OPS
+        st = self.st
+        sd_h, sd_p, sd_n = ssd_dims(self.cfg)
+        ops = KERNEL_CONCRETE_OPS if concrete else KERNEL_SYMBOLIC_OPS
+        vt = kernel_vmem_terms(qb=qb, kvb=kvb, rnb=rnb, sch=sch,
+                               head_dim=st.head_dim, d_model=st.d_model,
+                               ssd_head_dim=sd_p, ssd_state=sd_n, ops=ops)
+        peak = vt["rms"] if concrete else wrap(vt["rms"])
+        if st.attn_layers_frac:
+            peak = ops.max(peak, vt["attn"])
+        if sd_h:
+            peak = ops.max(peak, vt["ssd"])
+        return peak
 
     def _phase_channel_exprs(self, phase: PhaseTraffic
                              ) -> Tuple[Expr, Expr, Expr, Expr]:
@@ -436,6 +518,11 @@ class StageCostModel:
         e["z2"] = (zero >= 2).astype(np.float64)
         e["z3"] = (zero >= 3).astype(np.float64)
         e.setdefault("inflight", 1.0)
+        # kernel knobs default to the frozen config so pre-existing callers
+        # that never sweep the kernel dimension keep working unchanged
+        for k, v in zip(("qb", "kvb", "rnb", "sch"),
+                        DEFAULT_KERNEL_CONFIG.astuple()):
+            e.setdefault(k, float(v))
         for k in SYMS:
             if k not in e:
                 raise KeyError(f"cost-model env missing {k!r}")
@@ -562,7 +649,8 @@ class StageCostModel:
         mem_fwd = np.asarray(raw["mem_fwd"], np.float64)
         mem_bwd = np.asarray(raw["mem_bwd"], np.float64)
         out = {"mem_fwd": mem_fwd, "mem_bwd": mem_bwd,
-               "mem_peak": np.maximum(mem_fwd, mem_bwd)}
+               "mem_peak": np.maximum(mem_fwd, mem_bwd),
+               "vmem_peak": np.asarray(raw["vmem_peak"], np.float64)}
         if key is not None:
             self._cache_put(key, out)
         return out
@@ -662,6 +750,8 @@ class StageCostModel:
             "ckpt": arr(lambda c: min(c.ckpt, layers)),
             "wo": arr(lambda c: c.wo), "go": arr(lambda c: c.go),
             "oo": arr(lambda c: c.oo), "ao": arr(lambda c: c.ao),
+            "qb": arr(lambda c: c.qb), "kvb": arr(lambda c: c.kvb),
+            "rnb": arr(lambda c: c.rnb), "sch": arr(lambda c: c.sch),
             "L": float(layers), "G": float(grad_accum),
             "inflight": float(inflight),
         }
@@ -686,9 +776,12 @@ def estimate_plan(cfg: ArchConfig, shape: ShapeConfig, plan, *,
         scm = StageCostModel(cfg, shape.seq_len, hw=hw, cp=cp,
                              has_embed=(i == 0), has_head=(i == n_st - 1),
                              sequence_parallel=plan.sequence_parallel)
+        kc = plan.kernel
         cand = Candidate(b=stg.micro_batch, dp=stg.dp, tp=stg.tp,
                          zero=stg.zero, ckpt=min(stg.ckpt_layers, stg.layers),
-                         wo=stg.wo, go=stg.go, oo=stg.oo, ao=stg.ao)
+                         wo=stg.wo, go=stg.go, oo=stg.oo, ao=stg.ao,
+                         qb=kc.attn_q_block, kvb=kc.attn_kv_block,
+                         rnb=kc.rmsnorm_block, sch=kc.ssd_chunk)
         env = scm.env_from_candidates([cand], layers=stg.layers,
                                       grad_accum=plan.grad_accum,
                                       inflight=max(1, n_st - i))

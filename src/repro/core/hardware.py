@@ -16,6 +16,7 @@ class HardwareSpec:
     dci_bw: float = 6.25e9               # inter-pod (pod axis) per chip
     host_bw: float = 25e9                # host<->HBM per chip (offload path)
     mxu_min_dim: int = 128               # MXU tile alignment
+    vmem_bytes: float = 16 * 2**20       # on-core vector memory (per core)
 
     @property
     def ici_bw_total(self) -> float:

@@ -33,8 +33,9 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.costmodel import CostParams, StageCostModel
 from repro.core.hardware import V5E, HardwareSpec
-from repro.core.schedule import (RATIO_GRID, Candidate, CandidateGrid,
-                                 candidate_grid, enumerate_candidates)
+from repro.core.schedule import (DEFAULT_KERNEL_GRID, RATIO_GRID, Candidate,
+                                 CandidateGrid, candidate_grid,
+                                 enumerate_candidates)
 
 ALL_RATIO_DIMS = ("wo", "go", "oo", "ao")
 
@@ -132,7 +133,9 @@ def tune_stage(cfg: ArchConfig, *, seq_len: int, layers: int, n_devices: int,
                scm: Optional[StageCostModel] = None,
                refine: bool = True,
                engine: str = "compiled",
-               backend: Optional[str] = None) -> IntraStageResult:
+               backend: Optional[str] = None,
+               kernel_grid: Sequence[Tuple[int, int, int, int]]
+               = DEFAULT_KERNEL_GRID) -> IntraStageResult:
     """Batched sweep -> feasible set -> Pareto frontier -> ratio refinement.
 
     engine="compiled" (default) runs the struct-of-arrays grid through the
@@ -157,14 +160,15 @@ def tune_stage(cfg: ArchConfig, *, seq_len: int, layers: int, n_devices: int,
             inflight=inflight, hw=hw, cp=cp, zeros=zeros, ratios=ratios,
             ratio_dims=ratio_dims, ckpt_granularity=ckpt_granularity,
             ckpt_values=ckpt_values, max_tp=max_tp, max_front=max_front,
-            scm=scm, refine=refine)
+            scm=scm, refine=refine, kernel_grid=kernel_grid)
     if engine != "compiled":
         raise ValueError(f"unknown engine {engine!r}")
     grid = candidate_grid(
         cfg, n_devices=n_devices, layers=layers,
         global_batch=global_batch_per_stage, grad_accum=grad_accum,
         zeros=zeros, ratios=ratios, ratio_dims=ratio_dims, max_tp=max_tp,
-        ckpt_granularity=ckpt_granularity, ckpt_values=ckpt_values)
+        ckpt_granularity=ckpt_granularity, ckpt_values=ckpt_values,
+        kernel_grid=kernel_grid)
     res = IntraStageResult(layers=layers, n_devices=n_devices,
                            grad_accum=grad_accum, frontier=[],
                            n_evaluated=len(grid))
@@ -174,11 +178,16 @@ def tune_stage(cfg: ArchConfig, *, seq_len: int, layers: int, n_devices: int,
                                 has_embed=has_embed, has_head=has_head,
                                 backend=backend or "numpy")
     # memory feasibility (Eq. 4) on the full grid first; runtime + the
-    # interference model run only on the feasible survivors
-    mem = scm.evaluate_memory(grid.env(layers=layers, grad_accum=grad_accum,
-                                       inflight=inflight))["mem_peak"]
+    # interference model run only on the feasible survivors.  The kernel
+    # VMEM legality (tile working set vs on-core memory) rides on the same
+    # pass; the budget is floored at the default config's working set, so
+    # with the default kernel grid the mask is identical to the HBM-only one.
+    memout = scm.evaluate_memory(grid.env(layers=layers,
+                                          grad_accum=grad_accum,
+                                          inflight=inflight))
+    mem = memout["mem_peak"]
     budget = scm.memory_budget()
-    ok = mem <= budget
+    ok = (mem <= budget) & (memout["vmem_peak"] <= scm.vmem_budget_bytes)
     res.n_feasible = int(ok.sum())
     if not ok.any():
         return res
@@ -218,7 +227,9 @@ def tune_stage_multi_g(cfg: ArchConfig, *, seq_len: int, layers: int,
                        scm: Optional[StageCostModel] = None,
                        refine: bool = True,
                        cached: bool = True,
-                       backend: Optional[str] = None
+                       backend: Optional[str] = None,
+                       kernel_grid: Sequence[Tuple[int, int, int, int]]
+                       = DEFAULT_KERNEL_GRID
                        ) -> Dict[int, "IntraStageResult"]:
     """G-collapsed `tune_stage`: sweep one stage hypothesis for ALL grad
     accumulation choices in a single pass (ROADMAP "collapse the G loop").
@@ -256,7 +267,8 @@ def tune_stage_multi_g(cfg: ArchConfig, *, seq_len: int, layers: int,
             cfg, n_devices=n_devices, layers=layers,
             global_batch=global_batch_per_stage, grad_accum=G,
             zeros=zeros, ratios=ratios, ratio_dims=ratio_dims, max_tp=max_tp,
-            ckpt_granularity=ckpt_granularity, ckpt_values=ckpt_values)
+            ckpt_granularity=ckpt_granularity, ckpt_values=ckpt_values,
+            kernel_grid=kernel_grid)
         grids[G] = grid
         results[G] = IntraStageResult(layers=layers, n_devices=n_devices,
                                       grad_accum=G, frontier=[],
@@ -270,7 +282,7 @@ def tune_stage_multi_g(cfg: ArchConfig, *, seq_len: int, layers: int,
     skey = (cfg.name, layers, n_devices, global_batch_per_stage,
             tuple(zeros), tuple(ratios), tuple(ratio_dims),
             tuple(ckpt_values) if ckpt_values is not None else
-            ("gran", ckpt_granularity), max_tp)
+            ("gran", ckpt_granularity), max_tp, tuple(kernel_grid))
 
     # ---- one memory pass over the union grid ------------------------------
     envs = {G: grids[G].env(layers=layers, grad_accum=G, inflight=inflight)
@@ -287,11 +299,12 @@ def tune_stage_multi_g(cfg: ArchConfig, *, seq_len: int, layers: int,
                                  (len(grids[G]),)) for v, G in
                  zip(vals, live)])
     offs = np.cumsum([0] + [len(grids[G]) for G in live])
-    mem = scm.evaluate_memory(
+    memout = scm.evaluate_memory(
         union, cache_key=(skey + (tuple(live), float(inflight))
-                          if cached else None))["mem_peak"]
+                          if cached else None))
+    mem = memout["mem_peak"]
     budget = scm.memory_budget()
-    ok = mem <= budget
+    ok = (mem <= budget) & (memout["vmem_peak"] <= scm.vmem_budget_bytes)
 
     # ---- runtime on the feasible rows, per G (time tape results hit the
     # knob-tuple cache across same-role hypotheses differing only in
@@ -345,12 +358,14 @@ def _tune_stage_legacy(cfg: ArchConfig, *, seq_len, layers, n_devices,
                        global_batch_per_stage, grad_accum, has_embed,
                        has_head, inflight, hw, cp, zeros, ratios, ratio_dims,
                        ckpt_granularity, ckpt_values, max_tp, max_front, scm,
-                       refine) -> IntraStageResult:
+                       refine, kernel_grid=DEFAULT_KERNEL_GRID
+                       ) -> IntraStageResult:
     cands = list(enumerate_candidates(
         cfg, n_devices=n_devices, layers=layers,
         global_batch=global_batch_per_stage, grad_accum=grad_accum,
         zeros=zeros, ratios=ratios, ratio_dims=ratio_dims, max_tp=max_tp,
-        ckpt_granularity=ckpt_granularity, ckpt_values=ckpt_values))
+        ckpt_granularity=ckpt_granularity, ckpt_values=ckpt_values,
+        kernel_grid=kernel_grid))
     res = IntraStageResult(layers=layers, n_devices=n_devices,
                            grad_accum=grad_accum, frontier=[],
                            n_evaluated=len(cands))
@@ -362,7 +377,11 @@ def _tune_stage_legacy(cfg: ArchConfig, *, seq_len, layers, n_devices,
                                   grad_accum=grad_accum, inflight=inflight)
     out = scm.evaluate_recursive(env)
     budget = scm.memory_budget()
-    ok = out["mem_peak"] <= budget
+    # same recursive-walk discipline for the VMEM legality term
+    vmem = np.asarray(scm.vmem_peak.evaluate(scm._env(env), {}), np.float64)
+    ok = (out["mem_peak"] <= budget) \
+        & (np.broadcast_to(vmem, out["mem_peak"].shape)
+           <= scm.vmem_budget_bytes)
     res.n_feasible = int(ok.sum())
     if not ok.any():
         return res

@@ -13,6 +13,29 @@ from typing import List, Optional, Tuple
 
 
 @dataclass(frozen=True)
+class KernelConfig:
+    """Per-op kernel implementation choices: which kernel runs and its
+    tile/block sizes.  A tuned plan dimension — the tuner prices these with
+    a roofline delta term and verifies survivors by instantiating the real
+    Pallas kernels.  The defaults reproduce the pre-tuning behaviour
+    bit-for-bit (the roofline delta term is exactly 0 at the defaults)."""
+    attn_q_block: int = 512     # flash-attention query tile (rows)
+    attn_kv_block: int = 512    # flash-attention key/value tile (cols)
+    rmsnorm_block: int = 256    # rmsnorm row-block
+    ssd_chunk: int = 256        # ssd_scan intra-chunk length
+
+    def replace(self, **kw) -> "KernelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def astuple(self) -> Tuple[int, int, int, int]:
+        return (self.attn_q_block, self.attn_kv_block, self.rmsnorm_block,
+                self.ssd_chunk)
+
+
+DEFAULT_KERNEL_CONFIG = KernelConfig()
+
+
+@dataclass(frozen=True)
 class StageConfig:
     layers: int                 # L_i
     micro_batch: int            # b_i (per data-parallel replica)
@@ -43,6 +66,7 @@ class Plan:
     use_pallas: bool = False
     grad_compression: bool = False  # int8 + error feedback on DP reduce
     kv_cache_dtype: str = "bf16"    # bf16 | int8 (serving; dynamic scales)
+    kernel: KernelConfig = DEFAULT_KERNEL_CONFIG  # tile/block choices
 
     @property
     def num_stages(self) -> int:
@@ -66,7 +90,7 @@ class Plan:
 
     # -- (de)serialization ----------------------------------------------------
     def to_json(self) -> str:
-        return json.dumps({
+        doc = {
             "grad_accum": self.grad_accum,
             "sequence_parallel": self.sequence_parallel,
             "remat_policy": self.remat_policy,
@@ -74,14 +98,22 @@ class Plan:
             "use_pallas": self.use_pallas,
             "grad_compression": self.grad_compression,
             "kv_cache_dtype": self.kv_cache_dtype,
-            "stages": [dataclasses.asdict(s) for s in self.stages],
-        }, indent=2)
+        }
+        # emitted only when tuned away from the defaults so plans from the
+        # frozen-default kernel dimension serialize byte-identically to
+        # pre-kernel-tuning plans (golden fixtures stay stable)
+        if self.kernel != DEFAULT_KERNEL_CONFIG:
+            doc["kernel"] = dataclasses.asdict(self.kernel)
+        doc["stages"] = [dataclasses.asdict(s) for s in self.stages]
+        return json.dumps(doc, indent=2)
 
     @staticmethod
     def from_json(text: str) -> "Plan":
         d = json.loads(text)
         stages = tuple(StageConfig(**s) for s in d.pop("stages"))
-        return Plan(stages=stages, **d)
+        kernel = KernelConfig(**d.pop("kernel")) if "kernel" in d \
+            else DEFAULT_KERNEL_CONFIG
+        return Plan(stages=stages, kernel=kernel, **d)
 
 
 def single_stage_plan(num_layers: int, *, dp: int, tp: int, micro_batch: int,

@@ -36,7 +36,8 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.plan import Plan, StageConfig
+from repro.core.plan import (DEFAULT_KERNEL_CONFIG, KernelConfig, Plan,
+                             StageConfig)
 
 # The four interference channels, in the order Alg. 1 consumes them.
 CHANNELS = ("C", "G2G", "D2H", "H2D")
@@ -45,6 +46,14 @@ CHANNELS = ("C", "G2G", "D2H", "H2D")
 # solved per-stage; a grid keeps the batched sweep dense and is refined by
 # `intra_stage.refine_ratios` around the best grid point)
 RATIO_GRID = (0.0, 0.25, 0.5, 0.75, 1.0)
+
+# The kernel-config dimension of the grid: (q_block, kv_block, rmsnorm_block,
+# ssd_chunk) tuples.  The single default tuple keeps the grid size and
+# enumeration order byte-identical to the pre-kernel-tuning grid; the tuner
+# swaps in `kernels.autotune.legal_kernel_grid(...)` when the kernel
+# dimension is swept.
+DEFAULT_KERNEL_GRID: Tuple[Tuple[int, int, int, int], ...] = (
+    DEFAULT_KERNEL_CONFIG.astuple(),)
 
 
 @dataclass(frozen=True)
@@ -59,11 +68,21 @@ class Candidate:
     go: float
     oo: float
     ao: float
+    # kernel-config knobs (tile/block sizes); the defaults reproduce the
+    # pre-tuning fixed constants so legacy constructors are unchanged
+    qb: int = 512   # flash-attention q_block
+    kvb: int = 512  # flash-attention kv_block
+    rnb: int = 256  # rmsnorm row-block
+    sch: int = 256  # ssd_scan chunk
 
     def to_stage(self, layers: int) -> StageConfig:
         return StageConfig(layers=layers, micro_batch=self.b, dp=self.dp,
                            tp=self.tp, zero=self.zero, ckpt_layers=self.ckpt,
                            wo=self.wo, go=self.go, oo=self.oo, ao=self.ao)
+
+    def kernel_config(self) -> KernelConfig:
+        return KernelConfig(attn_q_block=self.qb, attn_kv_block=self.kvb,
+                            rmsnorm_block=self.rnb, ssd_chunk=self.sch)
 
 
 def divisors(n: int) -> List[int]:
@@ -120,7 +139,9 @@ def enumerate_candidates(cfg: ArchConfig, *, n_devices: int, layers: int,
                          ratio_dims: Sequence[str] = ("oo", "ao"),
                          max_tp: Optional[int] = None,
                          ckpt_granularity: int = 1,
-                         ckpt_values: Optional[Sequence[int]] = None
+                         ckpt_values: Optional[Sequence[int]] = None,
+                         kernel_grid: Sequence[Tuple[int, int, int, int]]
+                         = DEFAULT_KERNEL_GRID
                          ) -> Iterator[Candidate]:
     """The intra-stage grid.  `ratio_dims` limits which offload knobs are
     swept (`intra_stage.refine_ratios` then descends on those same dims
@@ -137,8 +158,11 @@ def enumerate_candidates(cfg: ArchConfig, *, n_devices: int, layers: int,
                     ratio_space = [ratios if d in ratio_dims else (0.0,)
                                    for d in ("wo", "go", "oo", "ao")]
                     for wo, go, oo, ao in itertools.product(*ratio_space):
-                        yield Candidate(b=b, dp=dp, tp=tp, zero=zero, ckpt=ck,
-                                        wo=wo, go=go, oo=oo, ao=ao)
+                        for qb, kvb, rnb, sch in kernel_grid:
+                            yield Candidate(b=b, dp=dp, tp=tp, zero=zero,
+                                            ckpt=ck, wo=wo, go=go, oo=oo,
+                                            ao=ao, qb=qb, kvb=kvb, rnb=rnb,
+                                            sch=sch)
 
 
 # ---------------------------------------------------------------------------
@@ -152,7 +176,8 @@ def enumerate_candidates(cfg: ArchConfig, *, n_devices: int, layers: int,
 # ---------------------------------------------------------------------------
 
 
-GRID_FIELDS = ("b", "dp", "tp", "zero", "ckpt", "wo", "go", "oo", "ao")
+GRID_FIELDS = ("b", "dp", "tp", "zero", "ckpt", "wo", "go", "oo", "ao",
+               "qb", "kvb", "rnb", "sch")
 
 
 @dataclass(frozen=True)
@@ -167,6 +192,10 @@ class CandidateGrid:
     go: np.ndarray
     oo: np.ndarray
     ao: np.ndarray
+    qb: np.ndarray
+    kvb: np.ndarray
+    rnb: np.ndarray
+    sch: np.ndarray
 
     def __len__(self) -> int:
         return int(self.b.shape[0])
@@ -177,7 +206,9 @@ class CandidateGrid:
                          tp=int(self.tp[i]), zero=int(self.zero[i]),
                          ckpt=int(self.ckpt[i]),
                          wo=float(self.wo[i]), go=float(self.go[i]),
-                         oo=float(self.oo[i]), ao=float(self.ao[i]))
+                         oo=float(self.oo[i]), ao=float(self.ao[i]),
+                         qb=int(self.qb[i]), kvb=int(self.kvb[i]),
+                         rnb=int(self.rnb[i]), sch=int(self.sch[i]))
 
     def take(self, idx) -> "CandidateGrid":
         return CandidateGrid(**{f: getattr(self, f)[idx]
@@ -191,6 +222,7 @@ class CandidateGrid:
             "b": self.b, "dp": self.dp, "tp": self.tp, "zero": self.zero,
             "ckpt": np.minimum(self.ckpt, float(layers)),
             "wo": self.wo, "go": self.go, "oo": self.oo, "ao": self.ao,
+            "qb": self.qb, "kvb": self.kvb, "rnb": self.rnb, "sch": self.sch,
             "L": float(layers), "G": float(grad_accum),
             "inflight": float(inflight),
         }
@@ -220,7 +252,9 @@ def candidate_grid(cfg: ArchConfig, *, n_devices: int, layers: int,
                    ratio_dims: Sequence[str] = ("oo", "ao"),
                    max_tp: Optional[int] = None,
                    ckpt_granularity: int = 1,
-                   ckpt_values: Optional[Sequence[int]] = None
+                   ckpt_values: Optional[Sequence[int]] = None,
+                   kernel_grid: Sequence[Tuple[int, int, int, int]]
+                   = DEFAULT_KERNEL_GRID
                    ) -> CandidateGrid:
     """Build the same grid as `enumerate_candidates`, as numpy columns."""
     dps, tps = legal_dp_tp_mask(n_devices, cfg, max_tp=max_tp)
@@ -234,9 +268,17 @@ def candidate_grid(cfg: ArchConfig, *, n_devices: int, layers: int,
     zs = np.asarray(list(zeros), np.float64)
     ratio_space = [np.asarray(ratios if d in ratio_dims else (0.0,),
                               np.float64) for d in ("wo", "go", "oo", "ao")]
-    # inner block in nested-loop order: zero (slowest), ckpt, wo, go, oo, ao
-    mesh = np.meshgrid(zs, cks, *ratio_space, indexing="ij")
-    zero_i, ck_i, wo_i, go_i, oo_i, ao_i = (m.ravel() for m in mesh)
+    # kernel tuples are a joint dimension (not a cross product of their
+    # fields); index them so the meshgrid stays rectangular.  With the
+    # single default tuple the extra size-1 axis leaves the raveled order —
+    # and therefore Pareto tie-breaking — byte-identical to the old grid.
+    kcols = np.asarray(list(kernel_grid), np.float64)
+    kidx = np.arange(kcols.shape[0], dtype=np.float64)
+    # inner block in nested-loop order: zero (slowest), ckpt, wo, go, oo,
+    # ao, kernel (fastest)
+    mesh = np.meshgrid(zs, cks, *ratio_space, kidx, indexing="ij")
+    zero_i, ck_i, wo_i, go_i, oo_i, ao_i, k_i = (m.ravel() for m in mesh)
+    k_i = k_i.astype(np.int64)
     n_in, n_out = zero_i.size, dps.size
     return CandidateGrid(
         b=np.repeat(bs.astype(np.float64), n_in),
@@ -245,6 +287,8 @@ def candidate_grid(cfg: ArchConfig, *, n_devices: int, layers: int,
         zero=np.tile(zero_i, n_out), ckpt=np.tile(ck_i, n_out),
         wo=np.tile(wo_i, n_out), go=np.tile(go_i, n_out),
         oo=np.tile(oo_i, n_out), ao=np.tile(ao_i, n_out),
+        qb=np.tile(kcols[k_i, 0], n_out), kvb=np.tile(kcols[k_i, 1], n_out),
+        rnb=np.tile(kcols[k_i, 2], n_out), sch=np.tile(kcols[k_i, 3], n_out),
     )
 
 
@@ -278,6 +322,11 @@ def validate_plan(plan: Plan, cfg: ArchConfig, n_devices: int,
                 errs.append(f"stage {i}: {r}={v}")
         if cfg.num_heads and cfg.num_heads % st.tp:
             errs.append(f"stage {i}: tp={st.tp} !| heads={cfg.num_heads}")
+    kc = plan.kernel
+    for f in ("attn_q_block", "attn_kv_block", "rmsnorm_block", "ssd_chunk"):
+        v = getattr(kc, f)
+        if v < 8 or v & (v - 1):
+            errs.append(f"kernel.{f}={v} (want a power of two >= 8)")
     return errs
 
 

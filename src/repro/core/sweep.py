@@ -173,7 +173,8 @@ def _sweep_units(tuner, plan: SweepPlan, knobs, unit_idxs: Sequence[int]
             ckpt_values={"tune": None, "full": (layers,),
                          "none": (0,)}[knobs["ckpt"]],
             max_tp=spec.max_tp, max_front=spec.max_front,
-            scm=tuner.scm(has_embed, has_head), refine=False)
+            scm=tuner.scm(has_embed, has_head), refine=False,
+            kernel_grid=tuner.kernel_grid())
         fronts, meta = by_role.setdefault(role, ({}, {}))
         for G, res in per_g.items():
             results[(i, G)] = res

@@ -42,8 +42,9 @@ from repro.core.hardware import V5E, HardwareSpec
 from repro.core.inter_stage import (InterStageSolution, StageCand,
                                     pipeline_objective, solve_milp)
 from repro.core.intra_stage import IntraStageResult, ParetoPoint, tune_stage
-from repro.core.plan import Plan, StageConfig
-from repro.core.schedule import RATIO_GRID, grad_accum_choices
+from repro.core.plan import DEFAULT_KERNEL_CONFIG, Plan, StageConfig
+from repro.core.schedule import (DEFAULT_KERNEL_GRID, RATIO_GRID,
+                                 grad_accum_choices)
 
 SPACES = ("none", "megatron", "ckpt", "zero", "offload", "mist", "uniform")
 
@@ -82,6 +83,18 @@ class TuneSpec:
     #       frontier-memo shards merged at the join.
     # The selected plan is identical for every value (asserted in tests).
     workers: int = 1
+    # Kernel-config dimension (core/plan.KernelConfig; docs/kernel-tuning.md):
+    # False sweeps only the default (q_block=512, kv_block=512, rmsnorm=256,
+    # ssd_chunk=256) tile tuple — the roofline delta term is exactly 0 there,
+    # so plans are byte-identical to the pre-kernel-tuning tuner.  True
+    # enlarges the grid with every legal tile tuple
+    # (repro.kernels.autotune.legal_kernel_grid: MXU alignment, seq-len
+    # divisibility, VMEM budget) as a joint per-candidate dimension.
+    kernel_tune: bool = False
+    # Explicit grid override ((q_block, kv_block, rmsnorm_block, ssd_chunk)
+    # tuples) — takes precedence over kernel_tune; mainly for tests and
+    # benchmarks that want a pinned, reproducible kernel sweep.
+    kernel_grid: Optional[Tuple[Tuple[int, int, int, int], ...]] = None
 
 
 @dataclass
@@ -141,6 +154,26 @@ class MistTuner:
         self._frontier_memo: Dict[Tuple, IntraStageResult] = {}
         self._memo_hits = 0
         self._n_swept = 0
+        self._kernel_grid: Optional[Tuple[Tuple[int, ...], ...]] = None
+
+    # -- kernel-config grid (the tuned tile/block dimension) -----------------
+    def kernel_grid(self) -> Tuple[Tuple[int, ...], ...]:
+        """The (q_block, kv_block, rmsnorm_block, ssd_chunk) tuples swept
+        jointly with every candidate.  Derived once per tuner from the spec
+        (workers rebuild the tuner from the pickled spec, so every process
+        computes the identical grid)."""
+        if self._kernel_grid is None:
+            if self.spec.kernel_grid is not None:
+                self._kernel_grid = tuple(
+                    tuple(int(x) for x in t) for t in self.spec.kernel_grid)
+            elif self.spec.kernel_tune:
+                from repro.kernels.autotune import legal_kernel_grid
+                self._kernel_grid = legal_kernel_grid(
+                    self.spec.arch, seq_len=self.spec.seq_len, hw=self.hw,
+                    cp=self.cp)
+            else:
+                self._kernel_grid = DEFAULT_KERNEL_GRID
+        return self._kernel_grid
 
     # -- stage cost model per role (L / inflight are symbols -> reusable) ---
     def scm(self, has_embed: bool, has_head: bool) -> StageCostModel:
@@ -187,7 +220,8 @@ class MistTuner:
         """Frontier-memo key; also the sweep executor's shard/merge key."""
         return (layers, n_dev, G, role, float(inflight),
                 tuple(knobs["zeros"]), tuple(knobs["ratios"]),
-                tuple(knobs["ratio_dims"]), knobs["ckpt"])
+                tuple(knobs["ratio_dims"]), knobs["ckpt"],
+                self.kernel_grid())
 
     def _frontier(self, *, layers: int, n_dev: int, G: int, role, inflight,
                   knobs) -> IntraStageResult:
@@ -211,7 +245,8 @@ class MistTuner:
             max_tp=self.spec.max_tp, max_front=self.spec.max_front,
             scm=self.scm(has_embed, has_head),
             refine=bool(knobs["ratio_dims"]),
-            engine=self.spec.engine)
+            engine=self.spec.engine,
+            kernel_grid=self.kernel_grid())
         self._n_swept += res.n_evaluated
         if self.spec.engine != "legacy":
             self._frontier_memo[key] = res
@@ -360,8 +395,19 @@ class MistTuner:
             p = c.point
             assert p is not None
             stages.append(p.cand.to_stage(c.layers))
-        return Plan(grad_accum=G, stages=tuple(stages),
+        plan = Plan(grad_accum=G, stages=tuple(stages),
                     sequence_parallel=True, remat_policy="full")
+        # kernel dimension: the plan records stage 0's tile tuple (the
+        # KernelConfig is plan-global; single-stage cells — the benchmarked
+        # path — make this exact).  Emitted only when the sweep actually
+        # moved off the default so frozen-default runs stay byte-identical;
+        # a non-default choice switches execution onto the Pallas kernels
+        # the tiles parameterize.
+        kc = sol.selection[0].point.cand.kernel_config()
+        if kc != DEFAULT_KERNEL_CONFIG:
+            plan = plan.replace(kernel=kc, attn_impl="pallas",
+                                use_pallas=True)
+        return plan
 
 
 # ---------------------------------------------------------------------------

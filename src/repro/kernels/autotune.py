@@ -1,0 +1,405 @@
+"""Kernel-config autotuning: legality, bench-and-cache, calibration.
+
+This is the concrete half of the kernel-config plan dimension
+(docs/kernel-tuning.md).  The symbolic half lives in the cost model:
+``core/costmodel.py`` compiles the shared roofline formulas
+(``core/costmodel_params.kernel_time_terms`` / ``kernel_vmem_terms``)
+over the ``qb``/``kvb``/``rnb``/``sch`` knob symbols so the candidate
+grid prices tile choices by tape.  This module:
+
+* **enumerates the legal grid** (`legal_kernel_grid`): power-of-two
+  tiles from a fixed menu, sequence-length divisibility, MXU-alignment
+  by construction, per-op VMEM working set within the budget (floored
+  at the default config's own working set, exactly like the cost
+  model's feasibility mask), ranked by the concrete roofline and capped
+  so the joint kernel dimension stays a small multiplier on the
+  candidate grid;
+* **benches real kernels** (`bench_config`): instantiates the Pallas
+  kernels (``interpret=True`` off-TPU) at the requested tiles and times
+  them, memoized in a JSON cache keyed by (op, shape, tiles, backend);
+* **verifies selections** (`verify_config`): every tuner-selected
+  config must compile and produce finite output through the actual
+  ``pallas_call`` — the acceptance gate for a tuned plan;
+* **calibrates the roofline** (`calibrate`): anchors the per-kernel
+  ``*_scale`` coefficients so predicted(default) == measured(default).
+  Because the cost model prices kernels as a *delta* against the
+  default config, calibration reshapes the sweep without moving any
+  frozen-default plan (golden fixtures are invariant to it).
+
+Everything except the bench/verify functions is pure python + math —
+importable from the numpy-only sweep workers without touching jax.
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import TYPE_CHECKING, Dict, Optional, Tuple
+
+from repro.core.costmodel_params import (KERNEL_CONCRETE_OPS, KernelCoeffs,
+                                         kernel_time_terms, kernel_vmem_terms,
+                                         ssd_dims)
+from repro.core.hardware import V5E, HardwareSpec
+from repro.core.plan import DEFAULT_KERNEL_CONFIG, KernelConfig
+
+if TYPE_CHECKING:
+    from repro.configs.base import ArchConfig
+
+# tile menus: powers of two, >= the MXU lane width for the matmul tiles
+# (validate_plan additionally enforces power-of-two >= 8 on any plan)
+ATTN_BLOCKS: Tuple[int, ...] = (128, 256, 512, 1024)
+RMS_BLOCKS: Tuple[int, ...] = (128, 256, 512)
+SSD_CHUNKS: Tuple[int, ...] = (64, 128, 256, 512)
+
+KernelTuple = Tuple[int, int, int, int]   # (qb, kvb, rnb, sch)
+
+
+# ---------------------------------------------------------------------------
+# concrete roofline prediction (shared formulas, float ops)
+# ---------------------------------------------------------------------------
+
+
+def predict_times(cfg: "ArchConfig", *, seq_len: int,
+                  config: KernelConfig = DEFAULT_KERNEL_CONFIG,
+                  b: float = 1.0, tp: float = 1.0, sp_div: float = 1.0,
+                  hw: HardwareSpec = V5E,
+                  kc: Optional[KernelCoeffs] = None) -> Dict[str, float]:
+    """Per-layer per-microbatch kernel seconds by op, evaluated with the
+    SAME formulas (same arithmetic order) the cost model tapes — over
+    floats instead of ``Expr``s, so symbolic and concrete evaluation
+    agree bitwise at equal bindings (tests/test_kernel_tuning.py)."""
+    kc = kc if kc is not None else KernelCoeffs()
+    sd_h, sd_p, sd_n = ssd_dims(cfg)
+    qb, kvb, rnb, sch = (float(v) for v in config.astuple())
+    terms = kernel_time_terms(
+        seq=seq_len, b=float(b), tp=float(tp), sp_div=float(sp_div),
+        qb=qb, kvb=kvb, rnb=rnb, sch=sch,
+        num_heads=cfg.num_heads, head_dim=cfg.head_dim, d_model=cfg.d_model,
+        ssd_heads=sd_h, ssd_head_dim=sd_p, ssd_state=sd_n,
+        hbm_bw=hw.hbm_bw, peak_flops=hw.peak_flops_bf16, kc=kc,
+        ops=KERNEL_CONCRETE_OPS)
+    attn_frac = _attn_frac(cfg)
+    total = terms["rms"]
+    if attn_frac:
+        total = total + attn_frac * terms["attn"]
+    if sd_h:
+        total = total + terms["ssd"]
+    return {"attn": terms["attn"], "rms": terms["rms"], "ssd": terms["ssd"],
+            "total": total}
+
+
+def _attn_frac(cfg: "ArchConfig") -> float:
+    # mirrors core/costmodel.arch_stats gating without importing it (that
+    # module pulls in the model zoo; workers want this import-light)
+    if cfg.family == "hybrid":
+        return 1.0 / cfg.shared_attn_every if cfg.shared_attn_every else 0.0
+    if cfg.family == "ssm":
+        return 0.0
+    return 1.0
+
+
+def predict_vmem(cfg: "ArchConfig",
+                 config: KernelConfig = DEFAULT_KERNEL_CONFIG
+                 ) -> Dict[str, float]:
+    """Per-op VMEM working set (bytes) — the concrete twin of the cost
+    model's ``vmem_peak`` tape output."""
+    sd_h, sd_p, sd_n = ssd_dims(cfg)
+    qb, kvb, rnb, sch = (float(v) for v in config.astuple())
+    return kernel_vmem_terms(qb=qb, kvb=kvb, rnb=rnb, sch=sch,
+                             head_dim=cfg.head_dim, d_model=cfg.d_model,
+                             ssd_head_dim=sd_p, ssd_state=sd_n,
+                             ops=KERNEL_CONCRETE_OPS)
+
+
+# ---------------------------------------------------------------------------
+# legal grid enumeration
+# ---------------------------------------------------------------------------
+
+
+def legal_kernel_grid(cfg: "ArchConfig", *, seq_len: int,
+                      hw: HardwareSpec = V5E, cp=None,
+                      max_tuples: int = 8) -> Tuple[KernelTuple, ...]:
+    """The (qb, kvb, rnb, sch) tuples the tuner sweeps jointly with every
+    candidate.  Legality: menu tiles (powers of two, MXU-friendly),
+    sequence divisibility per op, per-op VMEM working set within
+    ``max(hw.vmem_bytes, vmem(default))`` — the same floored budget the
+    cost model's feasibility mask uses, so the default tuple is always
+    legal.  The joint product is ranked by the concrete roofline (the
+    identical formula the tapes compile) and capped at ``max_tuples``
+    with the default tuple always first, keeping the kernel dimension a
+    small constant factor on the candidate grid.  Deterministic — sweep
+    workers recompute it from the pickled spec and must agree."""
+    kc = cp.kernels if cp is not None else KernelCoeffs()
+    d = DEFAULT_KERNEL_CONFIG
+    sd_h, _sd_p, _sd_n = ssd_dims(cfg)
+    attn_frac = _attn_frac(cfg)
+
+    vdef = predict_vmem(cfg, d)
+    budget = {op: max(float(hw.vmem_bytes), v) for op, v in vdef.items()}
+
+    def _ok_attn(qb: int, kvb: int) -> bool:
+        if seq_len % qb or seq_len % kvb:
+            return False
+        v = predict_vmem(cfg, d.replace(attn_q_block=qb, attn_kv_block=kvb))
+        return v["attn"] <= budget["attn"]
+
+    def _ok_rms(rnb: int) -> bool:
+        if seq_len % rnb:
+            return False
+        return predict_vmem(cfg, d.replace(rmsnorm_block=rnb))["rms"] \
+            <= budget["rms"]
+
+    def _ok_ssd(sch: int) -> bool:
+        if seq_len % sch:
+            return False
+        return predict_vmem(cfg, d.replace(ssd_chunk=sch))["ssd"] \
+            <= budget["ssd"]
+
+    attn_pairs = ([(qb, kvb) for qb in ATTN_BLOCKS for kvb in ATTN_BLOCKS
+                   if _ok_attn(qb, kvb)] if attn_frac
+                  else [(d.attn_q_block, d.attn_kv_block)])
+    rms_blocks = [rb for rb in RMS_BLOCKS if _ok_rms(rb)] \
+        or [d.rmsnorm_block]
+    ssd_chunks = ([sc for sc in SSD_CHUNKS if _ok_ssd(sc)] if sd_h
+                  else [d.ssd_chunk])
+    if not attn_pairs:
+        attn_pairs = [(d.attn_q_block, d.attn_kv_block)]
+    if sd_h and not ssd_chunks:
+        ssd_chunks = [d.ssd_chunk]
+
+    scored = []
+    for qb, kvb in attn_pairs:
+        for rnb in rms_blocks:
+            for sch in ssd_chunks:
+                t = predict_times(cfg, seq_len=seq_len, hw=hw, kc=kc,
+                                  config=KernelConfig(qb, kvb, rnb, sch)
+                                  )["total"]
+                scored.append((t, (qb, kvb, rnb, sch)))
+    scored.sort(key=lambda e: (e[0], e[1]))
+
+    default = d.astuple()
+    grid: list = [default]
+    for _t, tup in scored:
+        if tup != default and len(grid) < max(1, int(max_tuples)):
+            grid.append(tup)
+    return tuple(grid)
+
+
+# ---------------------------------------------------------------------------
+# bench-and-cache (real Pallas kernels, interpret=True off-TPU)
+# ---------------------------------------------------------------------------
+
+_DEF_CACHE = "~/.cache/repro/kernel_bench.json"
+
+
+def _cache_path(path=None) -> Path:
+    p = path or os.environ.get("REPRO_KERNEL_BENCH_CACHE", _DEF_CACHE)
+    return Path(p).expanduser()
+
+
+def _load_cache(path: Path) -> Dict[str, float]:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return {}
+
+
+def _store_cache(path: Path, cache: Dict[str, float]) -> None:
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_suffix(".tmp")
+        with open(tmp, "w") as f:
+            json.dump(cache, f, indent=0, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass                      # cache is an accelerator, never a gate
+
+
+def _time_fn(fn, *args, reps: int = 3) -> float:
+    """Median wall time of a jitted call, post-warmup."""
+    import time as _time
+
+    import jax
+    fn_j = jax.jit(fn)
+    jax.block_until_ready(fn_j(*args))          # compile + warm
+    ts = []
+    for _ in range(max(1, reps)):
+        t0 = _time.perf_counter()
+        jax.block_until_ready(fn_j(*args))
+        ts.append(_time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def _bench_shapes(cfg: "ArchConfig", seq_len: int):
+    """Small-but-representative bench shapes: a few heads/rows is enough
+    to rank tiles (measurements calibrate per-op *scales*, not absolute
+    device throughput; interpret-mode timings scale with grid steps)."""
+    seq = min(int(seq_len), 2048)
+    heads = min(max(1, cfg.num_heads), 4)
+    return seq, heads
+
+
+def bench_config(cfg: "ArchConfig", *, seq_len: int,
+                 config: KernelConfig = DEFAULT_KERNEL_CONFIG,
+                 reps: int = 3, cache_path=None,
+                 refresh: bool = False) -> Dict[str, float]:
+    """Measured seconds per op for one kernel config, through the real
+    kernels (``interpret=True`` off-TPU), memoized in a JSON cache."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.flash_attention import flash_attention_fwd
+    from repro.kernels.rmsnorm import rmsnorm as rmsnorm_pallas
+    from repro.kernels.ssd_scan import ssd_scan_pallas
+
+    backend = jax.default_backend()
+    interp = backend != "tpu"
+    seq, heads = _bench_shapes(cfg, seq_len)
+    sd_h, sd_p, sd_n = ssd_dims(cfg)
+    attn_frac = _attn_frac(cfg)
+
+    path = _cache_path(cache_path)
+    cache = {} if refresh else _load_cache(path)
+    out: Dict[str, float] = {}
+    dirty = False
+
+    def measure(key: str, thunk) -> float:
+        nonlocal dirty
+        if not refresh and key in cache:
+            return float(cache[key])
+        val = thunk()
+        cache[key] = val
+        dirty = True
+        return val
+
+    rng = jax.random.PRNGKey(0)
+
+    if attn_frac:
+        qb = min(config.attn_q_block, seq)
+        kvb = min(config.attn_kv_block, seq)
+        hd = max(cfg.head_dim, 1)
+        key = f"attn:{backend}:bh{heads}:s{seq}:d{hd}:q{qb}:k{kvb}"
+        kq, kk, kv_ = jax.random.split(rng, 3)
+        q = jax.random.normal(kq, (heads, seq, hd), jnp.bfloat16)
+        k = jax.random.normal(kk, (heads, seq, hd), jnp.bfloat16)
+        v = jax.random.normal(kv_, (heads, seq, hd), jnp.bfloat16)
+        out["attn"] = measure(key, lambda: _time_fn(
+            lambda a, b_, c: flash_attention_fwd(
+                a, b_, c, causal=True, q_block=qb, kv_block=kvb,
+                interpret=interp),
+            q, k, v, reps=reps))
+
+    rnb = min(config.rmsnorm_block, seq)
+    key = f"rms:{backend}:r{seq}:d{cfg.d_model}:b{rnb}"
+    x = jax.random.normal(rng, (seq, cfg.d_model), jnp.bfloat16)
+    scale = jnp.ones((cfg.d_model,), jnp.bfloat16)
+    out["rms"] = measure(key, lambda: _time_fn(
+        lambda a, s: rmsnorm_pallas(a, s, row_block=rnb, interpret=interp),
+        x, scale, reps=reps))
+
+    if sd_h:
+        sch = min(config.ssd_chunk, seq)
+        hs = min(sd_h, 4)
+        key = f"ssd:{backend}:s{seq}:h{hs}:p{sd_p}:n{sd_n}:c{sch}"
+        ks = jax.random.split(rng, 4)
+        xh = jax.random.normal(ks[0], (1, seq, hs, sd_p), jnp.bfloat16)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (1, seq, hs)))
+        a = -jnp.ones((hs,), jnp.float32)
+        bb = jax.random.normal(ks[2], (1, seq, hs, sd_n), jnp.bfloat16)
+        cc = jax.random.normal(ks[3], (1, seq, hs, sd_n), jnp.bfloat16)
+        out["ssd"] = measure(key, lambda: _time_fn(
+            lambda *args: ssd_scan_pallas(*args, chunk=sch,
+                                          interpret=interp),
+            xh, dt, a, bb, cc, reps=reps))
+
+    if dirty:
+        _store_cache(path, cache)
+    return out
+
+
+def verify_config(cfg: "ArchConfig", *, seq_len: int,
+                  config: KernelConfig) -> bool:
+    """Compile-and-run gate for a tuner-selected config: every kernel the
+    arch uses must instantiate through the real ``pallas_call``
+    (``interpret=True`` off-TPU) at the chosen tiles and produce finite
+    output of the right shape.  Raises on failure; returns True."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.flash_attention import flash_attention_fwd
+    from repro.kernels.rmsnorm import rmsnorm as rmsnorm_pallas
+    from repro.kernels.ssd_scan import ssd_scan_pallas
+
+    interp = jax.default_backend() != "tpu"
+    seq = min(int(seq_len), 1024)
+    sd_h, sd_p, sd_n = ssd_dims(cfg)
+    rng = jax.random.PRNGKey(1)
+
+    def check(name, arr, shape):
+        if tuple(arr.shape) != tuple(shape):
+            raise AssertionError(f"{name}: shape {arr.shape} != {shape}")
+        if not bool(jnp.all(jnp.isfinite(arr.astype(jnp.float32)))):
+            raise AssertionError(f"{name}: non-finite output at {config}")
+
+    if _attn_frac(cfg):
+        hd = max(cfg.head_dim, 1)
+        q = jax.random.normal(rng, (2, seq, hd), jnp.bfloat16)
+        o = flash_attention_fwd(q, q, q, causal=True,
+                                q_block=min(config.attn_q_block, seq),
+                                kv_block=min(config.attn_kv_block, seq),
+                                interpret=interp)
+        check("attn", o, q.shape)
+
+    x = jax.random.normal(rng, (seq, cfg.d_model), jnp.bfloat16)
+    o = rmsnorm_pallas(x, jnp.ones((cfg.d_model,), jnp.bfloat16),
+                       row_block=min(config.rmsnorm_block, seq),
+                       interpret=interp)
+    check("rms", o, x.shape)
+
+    if sd_h:
+        hs = min(sd_h, 2)
+        ks = jax.random.split(rng, 4)
+        xh = jax.random.normal(ks[0], (1, seq, hs, sd_p), jnp.bfloat16)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (1, seq, hs)))
+        a = -jnp.ones((hs,), jnp.float32)
+        bb = jax.random.normal(ks[2], (1, seq, hs, sd_n), jnp.bfloat16)
+        cc = jax.random.normal(ks[3], (1, seq, hs, sd_n), jnp.bfloat16)
+        y = ssd_scan_pallas(xh, dt, a, bb, cc,
+                            chunk=min(config.ssd_chunk, seq),
+                            interpret=interp)
+        check("ssd", y, xh.shape)
+    return True
+
+
+# ---------------------------------------------------------------------------
+# calibration: anchor the roofline scales on measured defaults
+# ---------------------------------------------------------------------------
+
+
+def calibrate(cfg: "ArchConfig", *, seq_len: int, hw: HardwareSpec = V5E,
+              kc: Optional[KernelCoeffs] = None, reps: int = 3,
+              cache_path=None) -> KernelCoeffs:
+    """Anchor each kernel's ``*_scale`` so predicted(default config) ==
+    measured(default config) on the bench shapes.  The relative shape of
+    the roofline across tiles is untouched (the other coefficients set
+    it); the scales just pin its absolute level to this host's
+    measurements.  Frozen-default plans are invariant to calibration —
+    the cost model prices kernels as a delta that is 0 at the default."""
+    kc = kc if kc is not None else KernelCoeffs()
+    measured = bench_config(cfg, seq_len=seq_len, reps=reps,
+                            cache_path=cache_path)
+    seq, heads = _bench_shapes(cfg, seq_len)
+    # predict on the BENCH shapes (b scaled so head/row counts match)
+    sd_h, _p, _n = ssd_dims(cfg)
+    pred = predict_times(cfg, seq_len=seq, hw=hw, kc=kc,
+                         b=max(1, heads) / max(1, cfg.num_heads))
+    upd = {}
+    if "attn" in measured and pred["attn"] > 0:
+        upd["attn_scale"] = kc.attn_scale * measured["attn"] / pred["attn"]
+    if "rms" in measured and pred["rms"] > 0:
+        upd["rms_scale"] = kc.rms_scale * measured["rms"] / pred["rms"]
+    if sd_h and "ssd" in measured and pred["ssd"] > 0:
+        upd["ssd_scale"] = kc.ssd_scale * measured["ssd"] / pred["ssd"]
+    return kc.replace(**upd)

@@ -106,45 +106,64 @@ def _blocked_bwd(q, k, v, out, lse, dout, causal: bool, scale: float,
     return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
-def _flash(q, k, v, causal: bool, scale: float, block: int, use_pallas: bool):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal: bool, scale: float, q_block: int, kv_block: int,
+           use_pallas: bool):
     if use_pallas:
         return flash_attention_fwd(q, k, v, causal=causal, scale=scale,
-                                   q_block=min(block, q.shape[1]),
-                                   kv_block=min(block, k.shape[1]),
+                                   q_block=min(q_block, q.shape[1]),
+                                   kv_block=min(kv_block, k.shape[1]),
                                    interpret=not _on_tpu())
-    out, _ = _blocked_fwd(q, k, v, causal, scale, min(block, k.shape[1]))
+    out, _ = _blocked_fwd(q, k, v, causal, scale,
+                          min(kv_block, k.shape[1]))
     return out
 
 
-def _flash_fwd_rule(q, k, v, causal, scale, block, use_pallas):
+def _flash_fwd_rule(q, k, v, causal, scale, q_block, kv_block, use_pallas):
     if use_pallas:
         out = flash_attention_fwd(q, k, v, causal=causal, scale=scale,
-                                  q_block=min(block, q.shape[1]),
-                                  kv_block=min(block, k.shape[1]),
+                                  q_block=min(q_block, q.shape[1]),
+                                  kv_block=min(kv_block, k.shape[1]),
                                   interpret=not _on_tpu())
         # lse recomputed cheaply for the bwd (flash-style recompute)
-        _, lse = _blocked_fwd(q, k, v, causal, scale, min(block, k.shape[1]))
+        _, lse = _blocked_fwd(q, k, v, causal, scale,
+                              min(kv_block, k.shape[1]))
     else:
-        out, lse = _blocked_fwd(q, k, v, causal, scale, min(block, k.shape[1]))
+        out, lse = _blocked_fwd(q, k, v, causal, scale,
+                                min(kv_block, k.shape[1]))
     return out, (q, k, v, out, lse)
 
 
-def _flash_bwd_rule(causal, scale, block, use_pallas, res, dout):
+def _flash_bwd_rule(causal, scale, q_block, kv_block, use_pallas, res, dout):
     q, k, v, out, lse = res
     dq, dk, dv = _blocked_bwd(q, k, v, out, lse, dout, causal, scale,
-                              min(block, k.shape[1]))
+                              min(kv_block, k.shape[1]))
     return dq, dk, dv
 
 
 _flash.defvjp(_flash_fwd_rule, _flash_bwd_rule)
 
 
+def _fit_block(blk: int, size: int) -> int:
+    blk = min(blk, size)
+    while size % blk:
+        blk //= 2
+    return blk
+
+
 def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
               causal: bool = True, impl: str = "blocked",
               block: int = DEFAULT_BLOCK,
+              q_block: Optional[int] = None,
+              kv_block: Optional[int] = None,
               scale: Optional[float] = None) -> jax.Array:
-    """q (B,Sq,H,hd); k/v (B,Sk,KV,hd) with H = KV*G (GQA) -> (B,Sq,H,hd)."""
+    """q (B,Sq,H,hd); k/v (B,Sk,KV,hd) with H = KV*G (GQA) -> (B,Sq,H,hd).
+
+    ``q_block``/``kv_block`` set the flash tiles independently (the tuned
+    kernel-config dimension); ``block`` is the legacy shared default for
+    callers that don't distinguish them.  Blocks that don't divide the
+    sequence are halved until they do (legality is best-effort here; the
+    tuner only emits divisible configs)."""
     b, sq, h, hd = q.shape
     kv = k.shape[2]
     g = h // kv
@@ -159,10 +178,10 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     if impl == "naive":
         of = ref.naive_attention(qf, kf, vf, causal=causal, scale=scale)
     else:
-        blk = block
-        while kf.shape[1] % blk:
-            blk //= 2
-        of = _flash(qf, kf, vf, causal, scale, blk, impl == "pallas")
+        qblk = _fit_block(q_block if q_block is not None else block, sq)
+        kblk = _fit_block(kv_block if kv_block is not None else block,
+                          kf.shape[1])
+        of = _flash(qf, kf, vf, causal, scale, qblk, kblk, impl == "pallas")
     return of.reshape(b, kv, g, sq, hd).transpose(0, 3, 1, 2, 4) \
         .reshape(b, sq, h, hd)
 
@@ -173,9 +192,10 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 def rmsnorm(x: jax.Array, scale: jax.Array, *, impl: str = "pallas",
-            eps: float = 1e-6) -> jax.Array:
+            eps: float = 1e-6, block: int = 256) -> jax.Array:
     if impl == "pallas":
-        return rmsnorm_pallas(x, scale, eps=eps, interpret=not _on_tpu())
+        return rmsnorm_pallas(x, scale, eps=eps, row_block=block,
+                              interpret=not _on_tpu())
     return ref.rmsnorm_ref(x, scale, eps)
 
 

@@ -22,12 +22,14 @@ containers, while ``lower``/``memory`` pull jax at import time.
 from typing import TYPE_CHECKING
 
 if TYPE_CHECKING:                                    # pragma: no cover
-    from repro.lowering.lower import (LoweredPlan, LoweredStage, lower_plan,
+    from repro.lowering.lower import (LoweredPlan, LoweredStage,
+                                      check_plan_mesh, lower_plan,
                                       plan_mesh_axes)
     from repro.lowering.memory import (MEMORY_REL_TOL, MemoryReport,
                                        StageMemory, memory_consistency)
 
-_LOWER = ("LoweredPlan", "LoweredStage", "lower_plan", "plan_mesh_axes")
+_LOWER = ("LoweredPlan", "LoweredStage", "lower_plan", "plan_mesh_axes",
+          "check_plan_mesh")
 _MEMORY = ("MemoryReport", "StageMemory", "memory_consistency",
            "MEMORY_REL_TOL")
 

@@ -49,6 +49,7 @@ def plan_mesh_axes(mesh, tp_size: int) -> SH.MeshAxes:
 def stage_exec_config(plan: Plan, stage: StageConfig) -> ExecConfig:
     """CKPT_i/AO_i -> remat segmentation + kernel/attention selection."""
     ck = min(stage.ckpt_layers, stage.layers)
+    kc = plan.kernel
     return ExecConfig(
         ckpt_layers=ck,
         offload_layers=int(round(stage.ao * ck)),
@@ -56,6 +57,10 @@ def stage_exec_config(plan: Plan, stage: StageConfig) -> ExecConfig:
         attn_impl=plan.attn_impl,
         use_pallas=plan.use_pallas,
         sequence_parallel=plan.sequence_parallel,
+        attn_q_block=kc.attn_q_block,
+        attn_kv_block=kc.attn_kv_block,
+        rmsnorm_block=kc.rmsnorm_block,
+        ssd_chunk=kc.ssd_chunk,
     )
 
 
@@ -104,10 +109,15 @@ class LoweredPlan:
     def plan_exec_cfg(self) -> ExecConfig:
         """Plan-level knobs only (no per-stage remat clamp) — the pipeline
         embed/unembed path and other stage-agnostic compute."""
+        kc = self.plan.kernel
         return ExecConfig(remat_policy=self.plan.remat_policy,
                           attn_impl=self.plan.attn_impl,
                           use_pallas=self.plan.use_pallas,
-                          sequence_parallel=self.plan.sequence_parallel)
+                          sequence_parallel=self.plan.sequence_parallel,
+                          attn_q_block=kc.attn_q_block,
+                          attn_kv_block=kc.attn_kv_block,
+                          rmsnorm_block=kc.rmsnorm_block,
+                          ssd_chunk=kc.ssd_chunk)
 
     @property
     def serve_exec_cfg(self) -> ExecConfig:
@@ -210,6 +220,44 @@ class LoweredPlan:
         return stage_layout_terms(self, i)
 
 
+def check_plan_mesh(plan: Plan, mesh) -> None:
+    """Reject lowering a plan onto a mesh whose axis sizes disagree with
+    the plan's parallel degrees.
+
+    The spec tables shard over the REAL mesh axes, so a mismatched pair
+    silently produces a layout for different dp/tp than the plan (and
+    its cost/memory predictions) assumed — the dryrun ``--view`` /
+    ``--plan-json`` hole.  The intentional tp=1 fold (``plan_mesh_axes``
+    folds 'model' into DP) stays legal: the folded dp is compared.
+    """
+    S = plan.num_stages
+    has_stage = "stage" in getattr(mesh, "shape", {})
+    if S > 1:
+        if not has_stage:
+            raise ValueError(
+                f"plan/mesh mismatch: plan has {S} pipeline stages but the "
+                f"mesh {dict(mesh.shape)} has no 'stage' axis")
+        if mesh.shape["stage"] != S:
+            raise ValueError(
+                f"plan/mesh mismatch: plan has {S} pipeline stages but the "
+                f"mesh 'stage' axis has size {mesh.shape['stage']}")
+    elif has_stage and mesh.shape["stage"] != 1:
+        raise ValueError(
+            f"plan/mesh mismatch: single-stage plan on a mesh with a "
+            f"'stage' axis of size {mesh.shape['stage']}")
+    for i, st in enumerate(plan.stages):
+        ma = (SH.MeshAxes.from_mesh(mesh) if S > 1
+              else plan_mesh_axes(mesh, st.tp))
+        dp_size = SH.axis_size(mesh, ma.dp)
+        tp_size = SH.axis_size(mesh, ma.tp)
+        if (dp_size, tp_size) != (st.dp, st.tp):
+            raise ValueError(
+                f"plan/mesh mismatch at stage {i}: plan wants (dp, tp) = "
+                f"({st.dp}, {st.tp}) but mesh {dict(mesh.shape)} provides "
+                f"(dp, tp) = ({dp_size}, {tp_size}); reshape the mesh view "
+                f"to match the plan (or retune the plan for this mesh)")
+
+
 def _split_table(params_sds, axes_table: Axes, ratio: float) -> Dict[str, int]:
     # lazy: repro.training re-exports its step builders (which import this
     # package) from its __init__, so a module-level import would be circular
@@ -229,10 +277,13 @@ def lower_plan(cfg: ArchConfig, shape: Optional[ShapeConfig], plan: Plan,
     ``shape`` is the workload the plan was tuned for; it is carried for
     ``memory_report`` and may be None for pure-execution callers that
     never ask for one.  ``mesh`` may be a concrete mesh (execution) or an
-    ``repro.compat.abstract_mesh`` shell (analysis).
+    ``repro.compat.abstract_mesh`` shell (analysis).  Raises ValueError
+    when the mesh axis sizes disagree with the plan's parallel degrees
+    (``check_plan_mesh``).
     """
     from repro.models.zoo import abstract_params
 
+    check_plan_mesh(plan, mesh)
     params_sds, axes_table = abstract_params(cfg)
     S = plan.num_stages
     pipeline = S > 1

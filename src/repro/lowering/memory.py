@@ -46,9 +46,8 @@ if TYPE_CHECKING:                                    # pragma: no cover
 # matched plan/mesh pairs — granite-3-8b's indivisible vocab at tp=8,
 # formerly a 0.207 rel error, is now exact.  The 3% headroom covers what
 # is genuinely NOT shared yet: the XLA reserved-bytes constant is an
-# estimate, and dryrun views may lower a plan onto a mesh whose axis
-# sizes differ from the plan's (the layout then counts the real mesh,
-# the predictor the plan).  Tracked as ROADMAP follow-ups.
+# estimate.  (Mismatched plan/mesh pairs — the old dryrun-view hole —
+# are now rejected outright by ``lower.check_plan_mesh``.)
 MEMORY_REL_TOL = 0.03
 
 
@@ -244,15 +243,15 @@ def memory_report(lowered: "LoweredPlan", *, hw: HardwareSpec = V5E,
 
 def _serve_report(lowered: "LoweredPlan", stt, shape: ShapeConfig,
                   budget: float, cp) -> MemoryReport:
-    """Serving: exact params-per-chip (+ exact cache-per-chip for decode)
-    + the transient envelope the dry-run has always used."""
+    """Serving: params-per-chip via the SHARED state-layout derivation
+    (the same evaluation the train report and the tuner's Eq. 4 use —
+    one derivation, not a private spec-table walk) + exact
+    cache-per-chip for decode + the transient envelope the dry-run has
+    always used."""
     st = lowered.stages[0]
     sc = st.stage
     mesh = lowered.mesh
-    weight = 0.0
-    for name, sds in lowered.params_sds.items():
-        n = math.prod(sds.shape)
-        weight += 2.0 * n / _nshards(mesh, st.param_specs[name])
+    weight = stage_layout_terms(lowered, 0)["weight"]
     cache = 0.0
     if shape.kind == "decode":
         import jax

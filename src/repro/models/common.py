@@ -35,6 +35,11 @@ class ExecConfig:
     remat_policy: str = "full"        # full | dots | none
     use_pallas: bool = False          # Pallas kernels (TPU); jnp ref path otherwise
     moe_group_size: int = 4096
+    # kernel tile/block sizes (plan.kernel -> stage_exec_config); the
+    # defaults match core/plan.DEFAULT_KERNEL_CONFIG
+    attn_q_block: int = 512
+    attn_kv_block: int = 512
+    rmsnorm_block: int = 256
     ssd_chunk: int = 256
     mlstm_chunk: int = 256
     compute_dtype: Any = jnp.bfloat16

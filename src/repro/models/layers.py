@@ -184,7 +184,9 @@ def attention(p: Params, x: jax.Array, cfg: ArchConfig, exec_cfg: ExecConfig,
         if exec_cfg.attn_impl != "naive":
             from repro.kernels import ops as kops
             ctx = kops.attention(q, k, v, causal=(mask_kind == "causal"),
-                                 impl=exec_cfg.attn_impl)
+                                 impl=exec_cfg.attn_impl,
+                                 q_block=exec_cfg.attn_q_block,
+                                 kv_block=exec_cfg.attn_kv_block)
             ctx = ctx.reshape(b_, s, kv, g, hd)
         else:
             qg = q.reshape(b_, s, kv, g, hd)

@@ -50,7 +50,7 @@ def test_blocked_bwd_matches_naive_grad(dtype):
                 .astype(jnp.float32).sum())
 
     def f_blk(q, k, v):
-        return ops._flash(q, k, v, True, 1.0 / np.sqrt(d), block,
+        return ops._flash(q, k, v, True, 1.0 / np.sqrt(d), block, block,
                           False).astype(jnp.float32).sum()
 
     g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
@@ -80,6 +80,49 @@ def test_pallas_flash_matches_naive(dtype, bh, s, d, qb, kb):
     np.testing.assert_allclose(
         np.asarray(got, np.float32), np.asarray(want, np.float32),
         atol=ATOL[dtype], rtol=RTOL[dtype])
+
+
+@pytest.mark.parametrize("qb,kb", [(32, 32), (32, 64), (64, 32), (128, 128),
+                                   (128, 64), (64, 128)])
+def test_pallas_flash_block_sweep(qb, kb):
+    """The kernel-config dimension: every (q_block, kv_block) tile pair the
+    tuner can emit must produce identical attention output."""
+    from repro.kernels.flash_attention import flash_attention_fwd
+    q, k, v = _qkv(2, 128, 128, 64, jnp.float32)
+    want = ref.naive_attention(q, k, v, causal=True)
+    got = flash_attention_fwd(q, k, v, causal=True, q_block=qb, kv_block=kb,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
+                               rtol=2e-5)
+
+
+@pytest.mark.parametrize("qb,kb", [(32, 64), (64, 32), (128, 128)])
+def test_attention_block_sweep_fwd_bwd(qb, kb):
+    """fwd AND bwd through the dispatch wrapper at asymmetric tile pairs:
+    the gradient must match autodiff of the naive reference regardless of
+    the tuned tiling (tiles change the schedule, never the math)."""
+    b, s, h, hd = 2, 128, 4, 32
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, hd), jnp.float32)
+
+    def f(impl, q_block=None, kv_block=None):
+        def g(q, k, v):
+            return ops.attention(q, k, v, impl=impl, q_block=q_block,
+                                 kv_block=kv_block) \
+                .astype(jnp.float32).sum()
+        return g
+
+    got = ops.attention(q, k, v, impl="pallas", q_block=qb, kv_block=kb)
+    want = ops.attention(q, k, v, impl="naive")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4,
+                               rtol=1e-4)
+    g_ref = jax.grad(f("naive"), argnums=(0, 1, 2))(q, k, v)
+    g_tile = jax.grad(f("pallas", qb, kb), argnums=(0, 1, 2))(q, k, v)
+    for a, bb_ in zip(g_ref, g_tile):
+        np.testing.assert_allclose(np.asarray(bb_), np.asarray(a),
+                                   atol=1e-3, rtol=1e-3)
 
 
 def test_pallas_flash_noncausal():
@@ -131,6 +174,17 @@ def test_rmsnorm_pallas_matches_ref(dtype, shape):
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32),
                                atol=ATOL[dtype], rtol=RTOL[dtype])
+
+
+@pytest.mark.parametrize("block", [32, 64, 128])
+def test_rmsnorm_block_sweep(block):
+    """The rmsnorm row-block is a tuned knob; output is block-invariant."""
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 64, 128), jnp.float32)
+    scale = jax.random.normal(jax.random.PRNGKey(5), (128,), jnp.float32)
+    want = ref.rmsnorm_ref(x, scale)
+    got = ops.rmsnorm(x, scale, impl="pallas", block=block)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
 
 
 # -- Mamba2 SSD chunk scan ---------------------------------------------------------

@@ -175,6 +175,51 @@ def test_lowering_pipeline_tables_match_frozen_reference():
     assert [s.inflight for s in low.stages] == [2, 1]
 
 
+def test_lower_plan_rejects_mismatched_mesh():
+    """The dryrun --view / --plan-json hole: a plan tuned for (dp, tp) =
+    (4, 2) silently lowered onto a 2x4 view, sharding over axes the plan
+    (and its memory/cost predictions) never assumed.  Now a ValueError
+    naming both sides."""
+    cfg = get_arch("granite-3-8b").reduced()
+    plan = single_stage_plan(cfg.num_layers, dp=4, tp=2, micro_batch=2,
+                             grad_accum=2, zero=1)
+    with pytest.raises(ValueError, match=r"plan/mesh mismatch.*\(4, 2\)"):
+        lower_plan(cfg, None, plan,
+                   compat.abstract_mesh((2, 4), ("data", "model")))
+    # the matching view lowers fine
+    lower_plan(cfg, None, plan,
+               compat.abstract_mesh((4, 2), ("data", "model")))
+
+
+def test_lower_plan_tp1_fold_stays_legal():
+    """A tp=1 plan on a mesh WITH a model axis is the intentional fold
+    (plan_mesh_axes): dp spans data*model, not a mismatch."""
+    cfg = get_arch("granite-3-8b").reduced()
+    plan = single_stage_plan(cfg.num_layers, dp=8, tp=1, micro_batch=1,
+                             grad_accum=2, zero=1)
+    low = lower_plan(cfg, None, plan,
+                     compat.abstract_mesh((4, 2), ("data", "model")))
+    assert low.stages[0].mesh_axes.tp is None
+    with pytest.raises(ValueError, match="plan/mesh mismatch"):
+        lower_plan(cfg, None, plan,
+                   compat.abstract_mesh((2, 2), ("data", "model")))
+
+
+def test_lower_plan_rejects_stage_mismatch():
+    """Pipeline plans need a 'stage' axis of exactly num_stages."""
+    cfg = get_arch("granite-3-8b")
+    stages = tuple(StageConfig(layers=20, micro_batch=2, dp=2, tp=2,
+                               zero=1) for _ in range(2))
+    plan = Plan(grad_accum=2, stages=stages)
+    with pytest.raises(ValueError, match="no 'stage' axis"):
+        lower_plan(cfg, None, plan,
+                   compat.abstract_mesh((2, 2), ("data", "model")))
+    with pytest.raises(ValueError, match="'stage' axis has size 4"):
+        lower_plan(cfg, None, plan,
+                   compat.abstract_mesh((4, 2, 2),
+                                        ("stage", "data", "model")))
+
+
 def test_state_shardings_tree_on_concrete_mesh():
     """Full optimizer-state NamedSharding tree (incl. WO/OO host/dev
     splits and memory kinds) == the frozen training/optimizer.py
