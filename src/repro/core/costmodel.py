@@ -62,7 +62,18 @@ class CostParams:
     host_eff: float = 0.90           # achievable fraction of host DMA bw
     coll_latency_us: float = 12.0    # per-collective launch latency
     mem_headroom: float = 0.92       # usable fraction of HBM
-    runtime_reserved: float = 0.75 * 2**30  # XLA runtime + fragmentation
+    # XLA runtime + fragmentation.  The default was cross-checked against
+    # real allocator stats (compiled-executable peak minus the modeled
+    # terms) by ``tools/calibrate_reserved.py`` on a reduced golden cell;
+    # re-run that tool on a real accelerator host to refit it there.
+    # Predictor and memory_report both read THIS field, so the
+    # predicted-vs-lowered cross-check is independent of its value.
+    runtime_reserved: float = 0.75 * 2**30
+    # serving (docs/serving.md): decode-step working-set envelope and the
+    # decode roofline's MXU efficiency (GEMV-shaped matmuls run far below
+    # the big-matmul peak)
+    serve_decode_transient: float = 0.3 * 2**30
+    decode_mxu_eff: float = 0.30
     # per-kernel roofline coefficients (the kernel-config plan dimension);
     # calibratable from kernels.autotune bench measurements
     kernels: KernelCoeffs = KernelCoeffs()
@@ -804,3 +815,123 @@ def estimate_plan(cfg: ArchConfig, shape: ShapeConfig, plan, *,
         "t_stable_per_stage": ts, "d_delta_per_stage": ds,
         "fits": max(mems) <= hw.hbm_bytes * cp.mem_headroom,
     }
+
+
+# ---------------------------------------------------------------------------
+# Serving cost model (docs/serving.md)
+# ---------------------------------------------------------------------------
+
+
+class ServeCostModel:
+    """Symbolic memory + latency of a single-stage SERVING deployment.
+
+    Symbols (per candidate): ``dp``, ``tp``, ``z1``/``z2``/``z3`` (ZeRO
+    indicators — only z3 matters for inference weights, the others are
+    bound for the shared state-layout expression), and ``kv8`` (0/1:
+    int8 KV cache).  The workload (batch, max context) is fixed per
+    model instance, mirroring ``StageCostModel``'s (arch, seq) binding.
+
+    Memory terms are the SHARED derivations — ``state_layout`` weights +
+    ``cache_layout`` caches — evaluated over Exprs, so the predicted
+    serve memory is bitwise-equal to ``LoweredPlan.memory_report()`` on
+    matched plan/mesh pairs (the PR-5 two-evaluation contract, extended
+    to serve shapes; tests/test_cache_layout.py).  Time terms are the
+    ``serve_time_terms`` roofline: decode is HBM-bound (weights + KV
+    prefix per token), prefill is compute-bound.
+    """
+
+    SYMS = ("dp", "tp", "z1", "z2", "z3", "kv8")
+
+    def __init__(self, cfg: ArchConfig, *, batch: int, max_len: int,
+                 hw: HardwareSpec = V5E, cp: CostParams = CostParams()):
+        from repro.core.costmodel_params import (param_count,
+                                                 serve_time_terms)
+        from repro.lowering.cache_layout import (prefill_transient_bytes,
+                                                 serve_device_bytes,
+                                                 symbolic_cache_bytes)
+        from repro.lowering.state_layout import SYMBOLIC_OPS
+        self.cfg, self.hw, self.cp = cfg, hw, cp
+        self.batch, self.max_len = int(batch), int(max_len)
+        st = arch_stats(cfg)
+        self.st = st
+        dp, tp, kv8 = Sym("dp"), Sym("tp"), Sym("kv8")
+
+        # weights: the shared state layout (z1/z2/z3, wo, oo, L are bound
+        # in the env — serve stages carry no optimizer state or offload,
+        # so wo = oo = 0 and L = num_layers)
+        weight = symbolic_state_terms(cfg, has_embed=True,
+                                      has_head=True)["weight"]
+        # caches: the shared cache layout, one derivation per dtype,
+        # blended by the exact-0/1 kv8 indicator
+        c16 = symbolic_cache_bytes(cfg, self.batch, self.max_len, "bf16")
+        c8 = symbolic_cache_bytes(cfg, self.batch, self.max_len, "int8")
+        cache = where(kv8, c8, c16)
+        mem_decode = serve_device_bytes(
+            weight=weight, cache=cache,
+            transient=cp.serve_decode_transient,
+            reserved=cp.runtime_reserved)
+        mem_prefill = serve_device_bytes(
+            weight=weight, cache=0.0,
+            transient=prefill_transient_bytes(
+                st.act_coef_full, float(st.d_model), float(self.batch),
+                float(self.max_len), dp, tp),
+            reserved=cp.runtime_reserved)
+        times = serve_time_terms(
+            batch=float(self.batch), seq_len=float(self.max_len),
+            dp=dp, tp=tp, z3=Sym("z3"),
+            n_active=float(param_count(cfg, active_only=True)),
+            n_layers=cfg.num_layers, d_model=st.d_model,
+            attn_flops_coef=st.attn_flops_coef, cache_bytes=cache,
+            hbm_bw=hw.hbm_bw, peak_flops=hw.peak_flops_bf16,
+            ici_bw=hw.ici_bw_total * cp.ici_eff,
+            mxu_eff_peak=cp.mxu_eff_peak, mxu_eff_floor=cp.mxu_eff_floor,
+            mxu_sat_tokens=cp.mxu_sat_tokens,
+            decode_mxu_eff=cp.decode_mxu_eff,
+            coll_latency_us=cp.coll_latency_us, ops=SYMBOLIC_OPS)
+        self.exprs = {"mem_decode": wrap(mem_decode),
+                      "mem_prefill": wrap(mem_prefill),
+                      "t_decode": wrap(times["t_decode"]),
+                      "t_prefill": wrap(times["t_prefill"])}
+        self.tape = S.compile_tape(self.exprs)
+
+    def memory_budget(self) -> float:
+        return self.hw.hbm_bytes * self.cp.mem_headroom
+
+    def _env(self, env: Dict[str, Any]) -> Dict[str, Any]:
+        full = {"wo": 0.0, "oo": 0.0, "L": float(self.cfg.num_layers)}
+        full.update(env)
+        return {k: np.asarray(v, np.float64) for k, v in full.items()}
+
+    def evaluate(self, env: Dict[str, Any]) -> Dict[str, np.ndarray]:
+        """Vectorized tape run over candidate arrays (``dp``/``tp``/
+        ``z1``/``z2``/``z3``/``kv8``)."""
+        return self.tape.run(self._env(env))
+
+    def evaluate_one(self, *, dp: int, tp: int, zero: int = 0,
+                     kv_cache_dtype: str = "bf16") -> Dict[str, float]:
+        env = {"dp": float(dp), "tp": float(tp),
+               "z1": 1.0 if zero >= 1 else 0.0,
+               "z2": 1.0 if zero >= 2 else 0.0,
+               "z3": 1.0 if zero >= 3 else 0.0,
+               "kv8": 1.0 if kv_cache_dtype == "int8" else 0.0}
+        return {k: float(v) for k, v in self.evaluate(env).items()}
+
+
+def estimate_serve_plan(cfg: ArchConfig, shape: ShapeConfig, plan, *,
+                        hw: HardwareSpec = V5E,
+                        cp: CostParams = CostParams()) -> Dict[str, float]:
+    """Serve-side twin of ``estimate_plan``: predicted per-device memory
+    (decode and prefill kinds) and roofline latencies for one concrete
+    single-stage plan.  ``mem_decode``/``mem_prefill`` are bitwise-equal
+    to ``memory_report().peak_bytes`` of the matching lowering."""
+    if len(plan.stages) != 1:
+        raise ValueError("serving plans are single-stage (S=1); got "
+                         f"{len(plan.stages)} stages")
+    st0 = plan.stages[0]
+    scm = ServeCostModel(cfg, batch=shape.global_batch,
+                         max_len=shape.seq_len, hw=hw, cp=cp)
+    r = scm.evaluate_one(dp=st0.dp, tp=st0.tp, zero=st0.zero,
+                         kv_cache_dtype=plan.kv_cache_dtype)
+    r["fits"] = max(r["mem_decode"], r["mem_prefill"]) \
+        <= scm.memory_budget()
+    return r

@@ -190,6 +190,71 @@ def kernel_vmem_terms(*, qb, kvb, rnb, sch, head_dim: int, d_model: int,
     return {"attn": attn, "rms": rms, "ssd": ssd}
 
 
+# ---------------------------------------------------------------------------
+# Serve-time roofline (docs/serving.md): decode is memory-bound (stream the
+# weights + the KV prefix per emitted token), prefill is compute-bound (one
+# big prefix matmul).  ONE formula pair over an Ops adapter with
+# ``where``/``gt`` (the state_layout adapters), evaluated symbolically by
+# ``ServeCostModel`` and concretely by ``estimate_serve_plan`` / tests.
+# ---------------------------------------------------------------------------
+
+
+def serve_time_terms(*, batch, seq_len, dp, tp, z3, n_active: float,
+                     n_layers: int, d_model: int, attn_flops_coef: float,
+                     cache_bytes, hbm_bw: float, peak_flops: float,
+                     ici_bw: float, mxu_eff_peak: float,
+                     mxu_eff_floor: float, mxu_sat_tokens: float,
+                     decode_mxu_eff: float, coll_latency_us: float,
+                     ops) -> Dict[str, Any]:
+    """``{"t_decode", "t_prefill"}`` seconds per device.
+
+    * ``t_decode`` — latency of ONE decode step (== per-token latency for
+      every sequence in the batch): roofline max of the GEMV compute and
+      the HBM stream of local weights + the full local KV prefix
+      (steady state at max context — the conservative, SLO-relevant
+      point), plus TP collective latency per layer and, under ZeRO-3
+      weight sharding, the per-step weight all-gather — the time price
+      of the memory the z3 knob saves.
+    * ``t_prefill`` — the one-shot prefix cost: prompt-slab matmul flops
+      at the saturating MXU efficiency, plus the same TP collectives
+      over the token slab and a single z3 all-gather.
+
+    ``batch``/``dp``/``tp``/``z3`` may be floats or ``Expr``s; the rest
+    are python scalars.  ``cache_bytes`` is the per-device cache term
+    from ``lowering/cache_layout.py`` (symbolic or concrete to match).
+    """
+    b_local = batch / dp
+    w_stream = 2.0 * n_active / tp          # bf16 weight bytes per device
+    lat = coll_latency_us * 1e-6
+    L = float(n_layers)
+
+    # -- decode step ---------------------------------------------------------
+    flops_dec = (2.0 * n_active + attn_flops_coef * seq_len) * b_local / tp
+    t_comp = flops_dec / (peak_flops * decode_mxu_eff)
+    t_hbm = (w_stream + cache_bytes) / hbm_bw
+    roof = ops.where(ops.gt(t_comp, t_hbm), t_comp, t_hbm)
+    tp_msg = 2.0 * b_local * float(d_model)
+    t_tp = (2.0 * L * (2.0 * (tp - 1.0) / tp) * tp_msg / ici_bw
+            + ops.gt(tp, 1.0) * 2.0 * L * lat)
+    t_z3 = z3 * ((dp - 1.0) / dp * w_stream / ici_bw
+                 + ops.gt(dp, 1.0) * lat * L)
+    t_decode = roof + t_tp + t_z3
+
+    # -- prefill (one-shot prefix) -------------------------------------------
+    tok_local = batch * seq_len / dp
+    sat = ops.where(ops.gt(tok_local, mxu_sat_tokens), 1.0,
+                    tok_local / mxu_sat_tokens)
+    eff = mxu_eff_floor + (mxu_eff_peak - mxu_eff_floor) * sat
+    flops_pre = (2.0 * n_active + attn_flops_coef * seq_len) * tok_local / tp
+    pre_msg = 2.0 * tok_local * float(d_model)
+    t_pre = (flops_pre / (peak_flops * eff)
+             + 2.0 * L * (2.0 * (tp - 1.0) / tp) * pre_msg / ici_bw
+             + ops.gt(tp, 1.0) * 2.0 * L * lat
+             + z3 * (dp - 1.0) / dp * w_stream / ici_bw)
+
+    return {"t_decode": t_decode, "t_prefill": t_pre}
+
+
 def ssd_dims(cfg: "ArchConfig"):
     """(heads, head_dim, state) of the arch's SSD scan, or zeros when the
     family has no SSM mixer."""

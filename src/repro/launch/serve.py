@@ -2,6 +2,12 @@
 
     python -m repro.launch.serve --arch granite-3-8b --smoke \
         --batch 4 --prompt-len 32 --gen 16
+
+``--tune`` replaces the hand-written dp-only baseline with the winner of
+the ``serve`` search space (docs/serving.md): the tuner prices (dp, tp,
+zero, kv dtype) candidates on the symbolic KV-cache/decode cost model,
+and the launcher cross-checks that model against the lowered plan's
+``memory_report()`` — the predicted serve bytes must match bitwise.
 """
 from __future__ import annotations
 
@@ -18,7 +24,7 @@ def generate(model, params, prompts: jnp.ndarray, gen: int, mesh, plan,
              lowered=None):
     """Greedy decode `gen` tokens for a batch of fixed-length prompts."""
     from repro.lowering import lower_plan
-    from repro.models.zoo import pad_caches
+    from repro.models.zoo import pad_caches, quantize_caches
     from repro.training.step import make_prefill_step, make_serve_step
 
     b, plen = prompts.shape
@@ -26,11 +32,13 @@ def generate(model, params, prompts: jnp.ndarray, gen: int, mesh, plan,
     # one lowering shared by the prefill and decode programs: both read the
     # same mesh-axis mapping / spec tables / serve exec config
     low = lowered or lower_plan(model.cfg, None, plan, mesh)
-    prefill = make_prefill_step(model, plan, mesh, return_cache=True,
-                                lowered=low)
+    prefill = make_prefill_step(model, return_cache=True, lowered=low)
     logits, caches = prefill.fn(params, {"tokens": prompts})
+    if plan.kv_cache_dtype == "int8":
+        # prefill emits bf16 caches; decode reads the int8+scales layout
+        caches = quantize_caches(caches)
     caches = pad_caches(caches, gen)
-    serve = make_serve_step(model, plan, mesh, b, max_len, donate=False,
+    serve = make_serve_step(model, batch=b, max_len=max_len, donate=False,
                             lowered=low)
     tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
     out = [tok]
@@ -41,6 +49,18 @@ def generate(model, params, prompts: jnp.ndarray, gen: int, mesh, plan,
     return jnp.concatenate(out, axis=1)
 
 
+def tuned_serve_plan(cfg, *, batch: int, max_len: int, n_devices: int):
+    """Run the ``serve`` search space and return (plan, report)."""
+    from repro.core.tuner import MistTuner, TuneSpec
+    spec = TuneSpec(arch=cfg, seq_len=max_len, global_batch=batch,
+                    n_devices=n_devices, space="serve")
+    report = MistTuner(spec).tune()
+    if report.plan is None:
+        raise SystemExit("serve tuner: no feasible plan "
+                         f"(swept {report.n_swept} candidates)")
+    return report.plan, report
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -48,6 +68,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--tune", action="store_true",
+                    help="pick the plan via the 'serve' search space "
+                         "instead of the dp-only baseline")
     args = ap.parse_args()
 
     from repro.configs.base import get_arch
@@ -60,9 +83,21 @@ def main():
         cfg = cfg.reduced()
     model = build_model(cfg)
     n = len(jax.devices())
-    mesh = make_host_mesh(n, 1)
-    plan = single_stage_plan(cfg.num_layers, dp=n, tp=1, micro_batch=1,
-                             grad_accum=1, zero=0, ckpt_layers=0)
+    if args.tune:
+        plan, report = tuned_serve_plan(
+            cfg, batch=args.batch, max_len=args.prompt_len + args.gen,
+            n_devices=n)
+        st = plan.stages[0]
+        mesh = make_host_mesh(st.dp, st.tp)
+        print(f"# tuned serve plan: dp={st.dp} tp={st.tp} zero={st.zero} "
+              f"kv={plan.kv_cache_dtype} "
+              f"(objective {report.objective:.4f}s, "
+              f"{report.throughput_tokens:.1f} tok/s predicted)")
+        print(plan.to_json())
+    else:
+        plan = single_stage_plan(cfg.num_layers, dp=n, tp=1, micro_batch=1,
+                                 grad_accum=1, zero=0, ckpt_layers=0)
+        mesh = make_host_mesh(n, 1)
     from repro.configs.base import ShapeConfig
     from repro.lowering import lower_plan
     shape = ShapeConfig("serve", args.prompt_len + args.gen, args.batch,
@@ -71,6 +106,15 @@ def main():
     rep = low.memory_report()
     print(f"# lowered serve memory: {rep.peak_bytes / 2**30:.2f} GiB "
           f"per device (weights+cache+transient)")
+    if args.tune:
+        # the two-evaluation contract, asserted at launch: the symbolic
+        # model the tuner ranked candidates with must equal the lowered
+        # report on the chosen plan, bitwise
+        from repro.core.costmodel import estimate_serve_plan
+        est = estimate_serve_plan(cfg, shape, plan)
+        assert est["mem_decode"] == rep.peak_bytes, \
+            (est["mem_decode"], rep.peak_bytes)
+        print("# predicted serve memory == memory_report(): bitwise OK")
     with compat.set_mesh(mesh):
         params, _ = model.init(jax.random.PRNGKey(0))
         prompts = jax.random.randint(jax.random.PRNGKey(1),

@@ -63,12 +63,31 @@ def main():
     if plan is not None:
         # tuner->runtime consistency: what the cost model predicted vs what
         # the lowered spec tables actually hold per device
-        from repro.lowering import memory_consistency
-        mc = memory_consistency(cfg, shape, plan)
-        print(f"# memory: predicted {mc['predicted_bytes'] / 2**30:.2f} GiB "
-              f"lowered {mc['lowered_bytes'] / 2**30:.2f} GiB "
-              f"(rel err {mc['rel_error']:.3f}, "
-              f"within_tol={mc['within_tol']})")
+        if args.space == "serve":
+            # serving plans are priced by the serve cost model; check the
+            # bitwise serve contract (docs/serving.md), not the training
+            # memory model
+            from repro.core.costmodel import estimate_serve_plan
+            from repro.lowering import lower_plan
+            st0 = plan.stages[0]
+            sshape = ShapeConfig("cli", args.seq, args.global_batch,
+                                 "decode")
+            mesh = compat.abstract_mesh((st0.dp, st0.tp),
+                                        ("data", "model"))
+            rep = lower_plan(cfg, sshape, plan, mesh).memory_report()
+            est = estimate_serve_plan(cfg, sshape, plan)
+            print(f"# serve memory: predicted "
+                  f"{est['mem_decode'] / 2**30:.2f} GiB lowered "
+                  f"{rep.peak_bytes / 2**30:.2f} GiB "
+                  f"(bitwise={est['mem_decode'] == rep.peak_bytes})")
+        else:
+            from repro.lowering import memory_consistency
+            mc = memory_consistency(cfg, shape, plan)
+            print(f"# memory: predicted "
+                  f"{mc['predicted_bytes'] / 2**30:.2f} GiB "
+                  f"lowered {mc['lowered_bytes'] / 2**30:.2f} GiB "
+                  f"(rel err {mc['rel_error']:.3f}, "
+                  f"within_tol={mc['within_tol']})")
         if args.tune and not args.smoke:
             return 0
 

@@ -1,0 +1,210 @@
+"""Shared KV/state-cache layout: ONE derivation of per-device cache bytes,
+evaluated both symbolically (the serve cost model's Expr tapes) and
+concretely (``memory_report`` on serve shapes) — the cache-side twin of
+:mod:`repro.lowering.state_layout` and the same two-evaluation contract
+PR 5 established for training state.
+
+``derive_cache_layout`` walks the abstract cache pytree the runtime
+actually allocates (``jax.eval_shape`` over ``model.init_caches`` — the
+exact tree ``make_serve_step`` shards) and records each leaf's key,
+shape, dtype width, and by-value batch-dim location.  ``cache_bytes``
+then reproduces the sharding cascade of
+``repro.parallel.sharding.cache_specs`` leaf by leaf as indicator
+arithmetic over a tiny Ops adapter:
+
+* batch divisible by dp (and dp > 1)  ->  batch dim sharded over dp;
+* otherwise, KV-sequence leaves shard their sequence dim over dp
+  (flash-decoding-style sequence-parallel KV);
+* tp lands on the canonical head/state/channel dim when divisible, with
+  the same per-key fallback chain ``cache_specs`` implements (k/v fall
+  back to the sequence dim only when dp did not take it, scales mirror
+  k/v, ...).
+
+Because the indicator cascades are exactly 0.0/1.0 and every quantity is
+integer-exact in float64, the symbolic blend equals the concrete select
+bitwise, and the raw spec-table walk in ``lowering/memory.py`` stays
+available as the independent oracle (tests/test_cache_layout.py).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple, TYPE_CHECKING
+
+from repro.lowering.state_layout import (CONCRETE_OPS, SYMBOLIC_OPS)
+from repro.core import symbolic as S
+
+if TYPE_CHECKING:                                    # pragma: no cover
+    from repro.configs.base import ArchConfig
+
+# Keys whose cache leaf carries the KV sequence at ``bdim + 1`` — MUST
+# mirror ``repro.parallel.sharding._SEQ_LEAF_SEQ_DIM`` (asserted in
+# tests/test_cache_layout.py; kept literal here so importing this module
+# never pulls jax).
+SEQ_CACHE_KEYS = ("k", "v", "latent", "k_rope", "k_scale", "v_scale")
+
+# state-head keys (mamba2 / mLSTM) that shard dim bdim+1 over tp
+_STATE_KEYS = ("ssm", "c", "n", "m")
+
+
+@dataclass(frozen=True)
+class CacheLeaf:
+    """One abstract cache tensor, as the runtime allocates it."""
+    key: str                       # trailing pytree key (cache_specs' view)
+    shape: Tuple[int, ...]
+    itemsize: int
+    bdim: Optional[int]            # batch dim located BY VALUE (or None)
+
+    @property
+    def nd(self) -> int:
+        return len(self.shape)
+
+
+@dataclass(frozen=True)
+class CacheLayout:
+    arch: str
+    batch: int
+    max_len: int
+    kv_cache_dtype: str
+    leaves: Tuple[CacheLeaf, ...]  # in jax.tree.leaves order
+
+
+_LAYOUT_CACHE: Dict[Tuple[Any, int, int, str], CacheLayout] = {}
+
+
+def derive_cache_layout(cfg: "ArchConfig", batch: int, max_len: int,
+                        kv_cache_dtype: str = "bf16") -> CacheLayout:
+    """Abstract-allocate the model's decode caches and record the layout.
+
+    Lazy jax import (the same pattern as ``derive_state_layout``): the
+    symbolic tuner only needs the recorded shapes, never real arrays."""
+    key = (cfg, int(batch), int(max_len), kv_cache_dtype)
+    hit = _LAYOUT_CACHE.get(key)
+    if hit is not None:
+        return hit
+    import jax
+    import jax.numpy as jnp
+    from repro.models.zoo import build_model
+
+    model = build_model(cfg)
+    cdt = jnp.int8 if kv_cache_dtype == "int8" else jnp.bfloat16
+    caches = jax.eval_shape(
+        lambda: model.init_caches(batch, max_len, cdt))
+    leaves = []
+    for path, sds in jax.tree_util.tree_leaves_with_path(caches):
+        k = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shape = tuple(int(d) for d in sds.shape)
+        bdim = next((i for i, d in enumerate(shape) if d == batch), None)
+        leaves.append(CacheLeaf(key=k, shape=shape,
+                                itemsize=int(sds.dtype.itemsize),
+                                bdim=bdim))
+    layout = CacheLayout(arch=cfg.name, batch=int(batch),
+                         max_len=int(max_len),
+                         kv_cache_dtype=kv_cache_dtype,
+                         leaves=tuple(leaves))
+    _LAYOUT_CACHE[key] = layout
+    return layout
+
+
+def _leaf_shards(leaf: CacheLeaf, batch: float, dp, tp, sb, ops) -> Any:
+    """Device count one cache leaf divides over — the symbolic twin of
+    ``_nshards(mesh, cache_specs(...)[leaf])``.
+
+    ``sb`` is the tree-global shard-batch indicator (batch % dp == 0 and
+    dp > 1).  Structural facts (key, rank, which dims exist) are concrete
+    python at derivation time; only dp/tp (and the divisibilities they
+    induce) flow through ``ops``.
+    """
+    if leaf.bdim is None:
+        return 1.0
+    nd, bdim, dims = leaf.nd, leaf.bdim, [float(d) for d in leaf.shape]
+    seq_elig = leaf.key in SEQ_CACHE_KEYS and nd > bdim + 1
+
+    # dp: batch dim when sb, else the KV sequence dim of eligible leaves
+    # (cache_specs assigns dp there unconditionally; at dp == 1 both
+    # reads are the identity, so the factor is simply dp).
+    dp_f = dp if seq_elig else ops.where(sb, dp, 1.0)
+
+    # tp cascade, per key — each chain reproduces cache_specs' elif
+    # order.  At tp == 1 every divisibility holds and the factor is
+    # tp == 1.0, matching the gated-off concrete branch exactly.
+    tp_f = 1.0
+    if leaf.key in ("k", "v"):
+        head_ok = (ops.divisible(dims[nd - 2], tp)
+                   if nd >= bdim + 3 else 0.0)
+        if nd > bdim + 1:
+            # sequence dim is free for tp iff dp took the batch dim
+            seq_ok = sb * ops.divisible(dims[bdim + 1], tp)
+            tp_f = ops.where(head_ok, tp, ops.where(seq_ok, tp, 1.0))
+        else:                                        # pragma: no cover
+            tp_f = ops.where(head_ok, tp, 1.0)
+    elif leaf.key in _STATE_KEYS and nd > bdim + 1:
+        tp_f = ops.where(ops.divisible(dims[bdim + 1], tp), tp, 1.0)
+    elif leaf.key == "conv":
+        tp_f = ops.where(ops.divisible(dims[nd - 1], tp), tp, 1.0)
+    elif leaf.key in ("latent", "k_rope") and nd > bdim + 1:
+        seq_ok = sb * ops.divisible(dims[bdim + 1], tp)
+        tp_f = ops.where(seq_ok, tp, 1.0)
+    elif leaf.key in ("k_scale", "v_scale"):
+        last_ok = ops.divisible(dims[nd - 1], tp)
+        seq_ok = (sb * ops.divisible(dims[bdim + 1], tp)
+                  if nd > bdim + 1 else 0.0)
+        tp_f = ops.where(last_ok, tp, ops.where(seq_ok, tp, 1.0))
+    return dp_f * tp_f
+
+
+def cache_bytes(layout: CacheLayout, *, dp, tp, ops=SYMBOLIC_OPS) -> Any:
+    """Per-device cache bytes of the whole tree: sum over leaves of
+    ``numel * itemsize / shards``, accumulated in tree-leaf order (the
+    order the concrete report sums in)."""
+    batch = float(layout.batch)
+    sb = ops.divisible(batch, dp) * ops.gt(dp, 1.0)
+    total = 0.0
+    for leaf in layout.leaves:
+        n = float(math.prod(leaf.shape))
+        sh = _leaf_shards(leaf, batch, dp, tp, sb, ops)
+        total = total + n * float(leaf.itemsize) / sh
+    return total
+
+
+def symbolic_cache_bytes(cfg: "ArchConfig", batch: int, max_len: int,
+                         kv_cache_dtype: str = "bf16") -> S.Expr:
+    """Serve-cost-model entry point: cache bytes as an Expr over the
+    tuner symbols ``dp`` / ``tp``."""
+    layout = derive_cache_layout(cfg, batch, max_len, kv_cache_dtype)
+    return S.wrap(cache_bytes(layout, dp=S.Sym("dp"), tp=S.Sym("tp"),
+                              ops=SYMBOLIC_OPS))
+
+
+def concrete_cache_bytes(cfg: "ArchConfig", batch: int, max_len: int,
+                         kv_cache_dtype: str, *, dp_size: int,
+                         tp_size: int) -> float:
+    """Lowering entry point: exact bytes from the stage's ACTUAL mesh
+    axis sizes (folded tp=1 meshes count the real mesh, exactly like
+    ``stage_layout_terms``)."""
+    layout = derive_cache_layout(cfg, batch, max_len, kv_cache_dtype)
+    return cache_bytes(layout, dp=float(dp_size), tp=float(tp_size),
+                       ops=CONCRETE_OPS)
+
+
+# ---------------------------------------------------------------------------
+# The serve-shape transient/total formulas, shared verbatim by the
+# symbolic model and the concrete report so the two sides stay bitwise.
+# ---------------------------------------------------------------------------
+
+
+def prefill_transient_bytes(act_coef_full: float, d_model: float,
+                            batch, seq_len, dp, tp) -> Any:
+    """One-shot prefix cost envelope: a couple of layers' activations for
+    the local token slab plus logits headroom (the dry-run's historical
+    serve-path formula, now the single definition)."""
+    tok_local = batch * seq_len / dp
+    return (4.0 * act_coef_full * d_model * tok_local / tp) + float(2**30)
+
+
+def serve_device_bytes(*, weight, cache, transient, reserved) -> Any:
+    """Total per-device serve bytes, summed in the exact order
+    ``StageMemory.device_bytes`` adds its (partly zero) terms — adding
+    0.0 is the float identity for finite terms, so
+    ``((weight + cache) + transient) + reserved`` is that sum."""
+    return ((weight + cache) + transient) + reserved

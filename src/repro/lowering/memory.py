@@ -44,11 +44,14 @@ if TYPE_CHECKING:                                    # pragma: no cover
 # state-layout derivation (spec-exact shard counts incl. indivisible-dim
 # replication, integer WO/OO/AO splits) the two sides agree bitwise on
 # matched plan/mesh pairs — granite-3-8b's indivisible vocab at tp=8,
-# formerly a 0.207 rel error, is now exact.  The 3% headroom covers what
-# is genuinely NOT shared yet: the XLA reserved-bytes constant is an
-# estimate.  (Mismatched plan/mesh pairs — the old dryrun-view hole —
-# are now rejected outright by ``lower.check_plan_mesh``.)
-MEMORY_REL_TOL = 0.03
+# formerly a 0.207 rel error, is now exact, and the serve-side cache
+# layout (``lowering/cache_layout.py``) extends the bitwise contract to
+# decode/prefill shapes.  The ``runtime_reserved`` constant — once the
+# stated reason for 3% headroom — is read from the same ``CostParams``
+# field by both sides AND cross-checked against real compiled-executable
+# bytes by ``tools/calibrate_reserved.py``, so the guard is now 1%:
+# pure drift detection, not an apology for any known divergence.
+MEMORY_REL_TOL = 0.01
 
 
 def _nshards(mesh, spec) -> int:
@@ -241,42 +244,59 @@ def memory_report(lowered: "LoweredPlan", *, hw: HardwareSpec = V5E,
                         budget_bytes=budget)
 
 
+def stage_cache_bytes(lowered: "LoweredPlan", shape: ShapeConfig) -> float:
+    """Per-device decode-cache bytes, walked from the ACTUAL cache
+    PartitionSpec tables — the independent oracle the shared cache
+    layout (``lowering/cache_layout.py``) is tested against, exactly as
+    ``_state_walk`` pins the state layout."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import build_model
+    st = lowered.stages[0]
+    mesh = lowered.mesh
+    model = build_model(lowered.cfg)
+    cdt = (jnp.int8 if lowered.plan.kv_cache_dtype == "int8"
+           else jnp.bfloat16)
+    caches = jax.eval_shape(
+        lambda: model.init_caches(shape.global_batch, shape.seq_len, cdt))
+    specs = SH.cache_specs(caches, mesh, st.mesh_axes, shape.global_batch)
+    cache = 0.0
+    for sds, sh in zip(jax.tree.leaves(caches), jax.tree.leaves(
+            specs, is_leaf=lambda x: hasattr(x, "spec"))):
+        n = math.prod(sds.shape)
+        cache += n * sds.dtype.itemsize / _nshards(mesh, sh.spec)
+    return cache
+
+
 def _serve_report(lowered: "LoweredPlan", stt, shape: ShapeConfig,
                   budget: float, cp) -> MemoryReport:
     """Serving: params-per-chip via the SHARED state-layout derivation
-    (the same evaluation the train report and the tuner's Eq. 4 use —
-    one derivation, not a private spec-table walk) + exact
-    cache-per-chip for decode + the transient envelope the dry-run has
-    always used."""
+    and cache-per-chip via the SHARED cache layout (the same two
+    evaluations the serve cost model runs over its Expr tapes — one
+    derivation per term, not a private spec-table walk), plus the
+    transient/reserved envelope from ``CostParams``."""
+    from repro.lowering.cache_layout import (concrete_cache_bytes,
+                                             prefill_transient_bytes)
     st = lowered.stages[0]
     sc = st.stage
     mesh = lowered.mesh
     weight = stage_layout_terms(lowered, 0)["weight"]
     cache = 0.0
     if shape.kind == "decode":
-        import jax
-        import jax.numpy as jnp
-        from repro.models import build_model
-        model = build_model(lowered.cfg)
-        cdt = (jnp.int8 if lowered.plan.kv_cache_dtype == "int8"
-               else jnp.bfloat16)
-        caches = jax.eval_shape(
-            lambda: model.init_caches(shape.global_batch, shape.seq_len,
-                                      cdt))
-        specs = SH.cache_specs(caches, mesh, st.mesh_axes,
-                               shape.global_batch)
-        for sds, sh in zip(jax.tree.leaves(caches), jax.tree.leaves(
-                specs, is_leaf=lambda x: hasattr(x, "spec"))):
-            n = math.prod(sds.shape)
-            cache += n * sds.dtype.itemsize / _nshards(mesh, sh.spec)
-        trans = 0.3 * 2**30
+        cache = concrete_cache_bytes(
+            lowered.cfg, shape.global_batch, shape.seq_len,
+            lowered.plan.kv_cache_dtype,
+            dp_size=SH.axis_size(mesh, st.mesh_axes.dp),
+            tp_size=SH.axis_size(mesh, st.mesh_axes.tp))
+        trans = cp.serve_decode_transient
     else:   # prefill: a couple of layers' activations + logits headroom
-        tok_local = shape.global_batch * shape.seq_len / max(1, sc.dp)
-        trans = (4.0 * stt.act_coef_full * stt.d_model * tok_local
-                 / max(1, sc.tp)) + 2**30
+        trans = prefill_transient_bytes(
+            stt.act_coef_full, stt.d_model, float(shape.global_batch),
+            float(shape.seq_len), float(max(1, sc.dp)),
+            float(max(1, sc.tp)))
     stage = StageMemory(index=0, weight_bytes=weight, cache_bytes=cache,
                         transient_bytes=trans,
-                        reserved_bytes=0.75 * 2**30)
+                        reserved_bytes=cp.runtime_reserved)
     return MemoryReport(kind=shape.kind, stages=(stage,),
                         budget_bytes=budget)
 

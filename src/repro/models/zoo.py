@@ -150,3 +150,30 @@ def pad_caches(caches, extra: int):
         return x
 
     return jax.tree_util.tree_map_with_path(leaf, caches)
+
+
+def quantize_caches(caches):
+    """Quantize a bf16 prefill cache tree to the int8 layout decode expects.
+
+    Prefill populates plain bf16 self-attention caches
+    (``_fresh_attn_cache``); when the plan pins ``kv_cache_dtype="int8"``
+    the decode path instead reads int8 k/v plus per-(token, head) f32
+    scales.  This converts only self-attention {k, v, pos} dicts — the
+    only caches with a quantized read/write path; MLA latents, SSM/mLSTM
+    states, and pos-less cross-attention caches pass through unchanged.
+    """
+    from repro.models.layers import quantize_kv
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "k" in node and "v" in node and "pos" in node:
+                kq, ks = quantize_kv(node["k"])
+                vq, vs = quantize_kv(node["v"])
+                out = dict(node, k=kq, v=vq, k_scale=ks, v_scale=vs)
+                return out
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    return walk(caches)

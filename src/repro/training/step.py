@@ -160,9 +160,13 @@ def init_sharded_state(model: Model, plan: Plan, mesh: Mesh, rng: jax.Array,
 # ---------------------------------------------------------------------------
 
 
-def make_prefill_step(model: Model, plan: Plan, mesh: Mesh,
+def make_prefill_step(model: Model, plan: Optional[Plan] = None,
+                      mesh: Optional[Mesh] = None,
                       return_cache: bool = False,
                       lowered: Optional[LoweredPlan] = None) -> CompiledStep:
+    if lowered is None and (plan is None or mesh is None):
+        raise ValueError("make_prefill_step needs either lowered= or "
+                         "(plan, mesh)")
     low = lowered or lower_plan(model.cfg, None, plan, mesh)
     ec = low.serve_exec_cfg
     rules = low.shard_rules()
@@ -175,14 +179,19 @@ def make_prefill_step(model: Model, plan: Plan, mesh: Mesh,
                         batch_shardings=None, exec_cfg=ec)
 
 
-def make_serve_step(model: Model, plan: Plan, mesh: Mesh,
-                    batch: int, max_len: int, donate: bool = True,
+def make_serve_step(model: Model, plan: Optional[Plan] = None,
+                    mesh: Optional[Mesh] = None,
+                    batch: int = 1, max_len: int = 1, donate: bool = True,
                     lowered: Optional[LoweredPlan] = None) -> CompiledStep:
     """One-token decode against caches of length max_len."""
+    if lowered is None and (plan is None or mesh is None):
+        raise ValueError("make_serve_step needs either lowered= or "
+                         "(plan, mesh)")
     low = lowered or lower_plan(model.cfg, None, plan, mesh)
     rules = low.shard_rules()
 
-    cache_dtype = jnp.int8 if plan.kv_cache_dtype == "int8" else jnp.bfloat16
+    kv_dtype = low.plan.kv_cache_dtype
+    cache_dtype = jnp.int8 if kv_dtype == "int8" else jnp.bfloat16
     caches_sds = jax.eval_shape(
         lambda: model.init_caches(batch, max_len, cache_dtype))
     cache_sh, update_mode = low.cache_shardings(caches_sds, batch)
