@@ -1,0 +1,26 @@
+"""Measurement-driven calibration of the cost model (docs/calibration.md).
+
+Three stages close the tune→execute→measure loop:
+
+* ``measure`` — run golden cells end-to-end through ``lower_plan`` →
+  ``make_train_step`` and record warmed median step times + allocator /
+  executable memory stats.
+* ``fit`` — attribute the measurements back to the named time-tape items,
+  fit ``CostParams`` group scales, refit ``InterferenceModel.factors``
+  via its ``calibrate()``, and anchor ``KernelCoeffs``.
+* ``profile`` — persist the result as a per-platform JSON
+  ``CalibrationProfile`` consumed by ``StageCostModel`` / ``TuneSpec``.
+
+Only ``profile`` is imported eagerly (numpy-only); ``measure``/``fit``
+and the ``driver`` import jax lazily so the package is safe to import
+anywhere the core is.
+"""
+from repro.calibration.profile import (DEFAULT_PROFILE, PROFILE_VERSION,
+                                       CalibrationProfile, default_platform,
+                                       load_profile, profile_dir,
+                                       profile_path)
+
+__all__ = [
+    "CalibrationProfile", "DEFAULT_PROFILE", "PROFILE_VERSION",
+    "default_platform", "load_profile", "profile_dir", "profile_path",
+]

@@ -1,0 +1,82 @@
+"""End-to-end calibration driver: measure → fit → report → persist.
+
+Shared by ``tools/calibrate.py``, ``launch/train.py --calibrate`` and
+``benchmarks/accuracy.py --measured`` so all three entry points produce
+the same JSON artifact shape (the CI calibration smoke uploads it).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, Optional, Sequence
+
+from repro.calibration.measure import GOLDEN_ARCHS, DEFAULT_SEQ
+
+
+def run_calibration(*, archs: Sequence[str] = GOLDEN_ARCHS,
+                    steps: int = 4, warmup: int = 2,
+                    seq_len: int = DEFAULT_SEQ,
+                    platform: Optional[str] = None,
+                    fit_interference: bool = True,
+                    fit_kernels: bool = False,
+                    write_profile: Optional[str] = None,
+                    max_cells_per_arch: Optional[int] = None,
+                    sweeps: int = 4) -> Dict:
+    """Measure the golden cells on the current devices, fit a profile,
+    and return the full report (cells, errors, profile, skip reasons).
+
+    ``write_profile``: a path, or ``"auto"`` for the platform's default
+    location under ``$REPRO_CALIBRATION_DIR``."""
+    from repro.calibration.fit import calibrate_kernels, fit_profile
+    from repro.calibration.measure import measure_cells
+    from repro.calibration.profile import default_platform, profile_path
+
+    platform = platform or default_platform()
+    cells, skipped = measure_cells(archs, steps=steps, warmup=warmup,
+                                   seq_len=seq_len,
+                                   max_cells_per_arch=max_cells_per_arch)
+    if not cells:
+        return {"platform": platform, "n_cells": 0, "cells": [],
+                "skipped_cells": skipped, "improved": False,
+                "error": "no cell ran to completion"}
+    kc = calibrate_kernels(archs) if fit_kernels else None
+    profile, report = fit_profile(cells, platform=platform,
+                                  fit_interference=fit_interference,
+                                  kernel_coeffs=kc, sweeps=sweeps)
+    report["skipped_cells"] = skipped
+    report["measured_cells"] = [c.to_doc() for c in cells]
+    report["profile"] = profile.to_doc()
+    if write_profile:
+        path = (profile_path(platform) if write_profile == "auto"
+                else Path(write_profile))
+        profile.save(path)
+        report["profile_path"] = str(path)
+    return report
+
+
+def format_table(report: Dict) -> str:
+    """Human-readable uncalibrated-vs-fitted error table."""
+    lines = []
+    if report.get("error"):
+        lines.append(f"calibration failed: {report['error']}")
+    for row in report.get("cells", []):
+        lines.append(
+            f"{row['label']:42s} measured {row['t_measured'] * 1e3:9.2f} ms"
+            f"  pred(uncal) {row['t_pred_uncalibrated'] * 1e3:9.2f} ms"
+            f"  pred(fit) {row['t_pred_fitted'] * 1e3:9.2f} ms"
+            f"  err {row['err_uncalibrated']:8.1%} -> "
+            f"{row['err_fitted']:7.1%}")
+    if "mean_err_uncalibrated" in report:
+        lines.append(
+            f"{'MEAN (' + str(report['n_cells']) + ' cells)':42s} "
+            f"err {report['mean_err_uncalibrated']:8.1%} -> "
+            f"{report['mean_err_fitted']:7.1%}  "
+            f"improved={report['improved']}")
+    for s in report.get("skipped_cells", []):
+        lines.append(f"SKIPPED {s['arch']}/{s['label']}: {s['error']}")
+    return "\n".join(lines)
+
+
+def write_report(report: Dict, path) -> None:
+    Path(path).write_text(json.dumps(report, indent=2, sort_keys=True)
+                          + "\n")

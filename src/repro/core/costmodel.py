@@ -35,7 +35,8 @@ from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core import symbolic as S
 from repro.core.costmodel_params import (KERNEL_SYMBOLIC_OPS, KernelCoeffs,
                                          kernel_time_terms,
-                                         kernel_vmem_terms, ssd_dims)
+                                         kernel_vmem_terms, mxu_efficiency,
+                                         ssd_dims)
 from repro.core.hardware import V5E, HardwareSpec
 from repro.core.interference import InterferenceModel, pred_intf
 from repro.core.plan import DEFAULT_KERNEL_CONFIG
@@ -236,9 +237,18 @@ class StageCostModel:
                  has_embed: bool = True, has_head: bool = True,
                  interference: Optional[InterferenceModel] = None,
                  sequence_parallel: bool = True,
-                 backend: str = "numpy"):
+                 backend: str = "numpy", profile=None):
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; have {BACKENDS}")
+        # ``profile`` is a calibration.CalibrationProfile: fitted per-platform
+        # constants layered over the caller's cp/interference (an explicit
+        # ``interference=`` argument wins over the profile's).  The default
+        # profile carries no overrides, so passing it changes nothing — the
+        # frozen-default guarantee the golden fixtures rely on.
+        if profile is not None:
+            cp = profile.cost_params(cp)
+            if interference is None:
+                interference = profile.interference_model()
         self.cfg, self.seq, self.hw, self.cp = cfg, seq_len, hw, cp
         self.has_embed, self.has_head = has_embed, has_head
         self.intf = interference or InterferenceModel()
@@ -246,6 +256,8 @@ class StageCostModel:
         self.sp = sequence_parallel
         self.backend = backend
         self.jax_auto_threshold = JAX_AUTO_THRESHOLD
+        if profile is not None and profile.jax_auto_threshold is not None:
+            self.jax_auto_threshold = int(profile.jax_auto_threshold)
         self.last_backend = "numpy"     # backend of the most recent tape run
         self._build()
 
@@ -327,9 +339,13 @@ class StageCostModel:
                      + st.attn_flops_coef * seq * L) * tok / tp
         if self.has_embed or self.has_head:
             flops_fwd = flops_fwd + 2.0 * st.n_embed * tok / tp
-        # MXU efficiency: saturating in per-device tokens
-        eff = cp.mxu_eff_floor + (cp.mxu_eff_peak - cp.mxu_eff_floor) * (
-            tok / (tok + cp.mxu_sat_tokens))
+        # MXU efficiency: saturating in per-device tokens — the shared
+        # formula (costmodel_params.mxu_efficiency), also exposed concretely
+        # via the public ``mxu_efficiency`` method so external consumers
+        # (benchmarks/accuracy.py) cannot drift from the tape's arithmetic
+        eff = mxu_efficiency(tok, eff_peak=cp.mxu_eff_peak,
+                             eff_floor=cp.mxu_eff_floor,
+                             sat_tokens=cp.mxu_sat_tokens)
         t_fwd = flops_fwd * (1.0 + cp.vpu_tax) / (hw.peak_flops_bf16 * eff)
 
         # ---- kernel-config roofline delta (tile/block knobs) ----------------
@@ -355,6 +371,17 @@ class StageCostModel:
         t_fwd = smax(t_fwd + self.kernel_time_delta, 0.1 * t_fwd)
         t_bwd = 2.0 * t_fwd
         t_recompute = t_fwd * (ck / smax(L, 1.0))
+
+        # dot-flops per pass (per microbatch, per device) — the quantities
+        # the time items above price.  Exposed as their own exprs
+        # (``evaluate_flops``) so consumers that need ground-truth flops
+        # (benchmarks/accuracy.py) read the model's OWN counts instead of
+        # inverting the time formula — inversion breaks once the kernel
+        # roofline delta or the smax floor moves a time item, flops do not.
+        self.flops_items: Dict[str, Expr] = {
+            "fwd": wrap(flops_fwd), "bwd": wrap(2.0 * flops_fwd),
+            "recompute": wrap(flops_fwd * (ck / smax(L, 1.0))),
+        }
 
         # ---- collective times (per microbatch) ------------------------------
         ici = hw.ici_bw_total * cp.ici_eff
@@ -679,6 +706,26 @@ class StageCostModel:
         return {k: np.asarray(expr.evaluate(e, memo), np.float64)
                 for k, expr in self.mem_terms.items()}
 
+    def evaluate_flops(self, env: Dict[str, Any]) -> Dict[str, np.ndarray]:
+        """Per-microbatch, per-device dot flops by pass (``fwd`` / ``bwd``
+        / ``recompute``) — the model's own counts, kernel-config invariant.
+        Diagnostics path (recursive evaluation with one shared memo), like
+        ``evaluate_memory_terms``."""
+        e = self._env(env)
+        memo: Dict[int, Any] = {}
+        return {k: np.asarray(expr.evaluate(e, memo), np.float64)
+                for k, expr in self.flops_items.items()}
+
+    def mxu_efficiency(self, tok) -> np.ndarray:
+        """Concrete MXU efficiency at ``tok`` per-device tokens per
+        microbatch — the SAME formula the time tape bakes in (shared via
+        ``costmodel_params.mxu_efficiency``), for consumers that need to
+        invert compute times back to flops or vice versa."""
+        cp = self.cp
+        return np.asarray(mxu_efficiency(
+            np.asarray(tok, np.float64), eff_peak=cp.mxu_eff_peak,
+            eff_floor=cp.mxu_eff_floor, sat_tokens=cp.mxu_sat_tokens))
+
     def evaluate_times(self, env: Dict[str, Any],
                        cache_key: Optional[Tuple] = None
                        ) -> Dict[str, np.ndarray]:
@@ -777,15 +824,19 @@ class StageCostModel:
 
 
 def estimate_plan(cfg: ArchConfig, shape: ShapeConfig, plan, *,
-                  hw: HardwareSpec = V5E, cp: CostParams = CostParams()
-                  ) -> Dict[str, float]:
+                  hw: HardwareSpec = V5E, cp: CostParams = CostParams(),
+                  interference: Optional[InterferenceModel] = None,
+                  profile=None) -> Dict[str, float]:
     """Step-time / memory estimate of a concrete Plan (any S) using the same
-    stage model + paper Eq. 1 for the pipeline objective."""
+    stage model + paper Eq. 1 for the pipeline objective.  ``profile`` layers
+    fitted calibration constants over ``cp``/``interference`` (see
+    ``StageCostModel``)."""
     n_st = len(plan.stages)
     ts, ds, mems, terms = [], [], [], []
     for i, stg in enumerate(plan.stages):
         scm = StageCostModel(cfg, shape.seq_len, hw=hw, cp=cp,
                              has_embed=(i == 0), has_head=(i == n_st - 1),
+                             interference=interference, profile=profile,
                              sequence_parallel=plan.sequence_parallel)
         kc = plan.kernel
         cand = Candidate(b=stg.micro_batch, dp=stg.dp, tp=stg.tp,

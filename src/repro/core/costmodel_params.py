@@ -77,6 +77,19 @@ class KernelCoeffs:
         return dataclasses.replace(self, **kw)
 
 
+def mxu_efficiency(tok, *, eff_peak, eff_floor, sat_tokens):
+    """Saturating MXU efficiency at ``tok`` per-device tokens per microbatch.
+
+    The ONE training-side efficiency formula: ``StageCostModel._build``
+    evaluates it over ``Expr`` knobs when compiling the time tape, and
+    consumers that need the concrete curve (``StageCostModel.mxu_efficiency``,
+    ``benchmarks/accuracy.py``) evaluate it over floats/arrays — identical
+    arithmetic in identical order, so external users cannot drift from the
+    model.  Rises from ``eff_floor`` toward ``eff_peak`` with half-saturation
+    at ``sat_tokens``."""
+    return eff_floor + (eff_peak - eff_floor) * (tok / (tok + sat_tokens))
+
+
 # ---------------------------------------------------------------------------
 # Ops adapters: the same formula runs over Exprs (tapes) or floats (bench
 # predictor); min/max are the only non-native operations the formulas use.

@@ -153,9 +153,10 @@ class InterferenceModel:
         """Fit slowdown factors from measured (times, wall) pairs.
 
         samples: list of ((c, g2g, d2h, h2d), measured_wall).  Returns the
-        post-fit mean relative error.  Uses scipy L-BFGS on log-factors."""
-        import scipy.optimize as so
-
+        post-fit mean relative error.  Minimizes squared wall error with
+        Nelder-Mead over the factor offsets (scipy when available, a pure
+        numpy simplex otherwise — the calibration subsystem must run in
+        environments without scipy)."""
         keys = sorted(self.factors)
         sizes = [len(self.factors[k]) for k in keys]
 
@@ -171,9 +172,7 @@ class InterferenceModel:
             return err
 
         x0 = np.concatenate([np.asarray(self.factors[k]) - 1.0 for k in keys])
-        res = so.minimize(loss, x0, method="Nelder-Mead",
-                          options={"maxiter": 2000, "fatol": 1e-12})
-        th = res.x
+        th = _minimize_simplex(loss, x0, maxiter=2000, fatol=1e-12)
         offs = np.cumsum([0] + sizes[:-1])
         self.factors = {
             k: tuple(1.0 + max(v, 0.0) for v in th[i:i + n])
@@ -183,6 +182,63 @@ class InterferenceModel:
             pred = float(self.predict(*ch))
             rel.append(abs(pred - wall) / max(wall, 1e-12))
         return float(np.mean(rel))
+
+
+def _scipy_minimize(loss, x0, *, maxiter, fatol) -> np.ndarray:
+    import scipy.optimize as so
+
+    res = so.minimize(loss, x0, method="Nelder-Mead",
+                      options={"maxiter": maxiter, "fatol": fatol})
+    return np.asarray(res.x, np.float64)
+
+
+def _minimize_simplex(loss, x0, *, maxiter=2000, fatol=1e-12) -> np.ndarray:
+    """Nelder-Mead with graceful degradation: scipy's implementation when
+    installed, else the pure-numpy fallback below (same initial simplex
+    convention, so the two paths converge to comparable minima)."""
+    try:
+        return _scipy_minimize(loss, x0, maxiter=maxiter, fatol=fatol)
+    except ImportError:
+        return _nelder_mead(loss, x0, maxiter=maxiter, fatol=fatol)
+
+
+def _nelder_mead(loss, x0, *, maxiter=2000, fatol=1e-12) -> np.ndarray:
+    """Compact downhill-simplex (Nelder & Mead 1965) — standard reflection /
+    expansion / contraction / shrink coefficients and scipy's initial-simplex
+    construction (each vertex perturbs one coordinate by 5%, or 0.00025 for
+    zero coordinates)."""
+    x0 = np.asarray(x0, np.float64)
+    n = x0.size
+    simplex = np.tile(x0, (n + 1, 1))
+    for i in range(n):
+        if simplex[i + 1, i] != 0.0:
+            simplex[i + 1, i] *= 1.05
+        else:
+            simplex[i + 1, i] = 0.00025
+    f = np.array([loss(v) for v in simplex])
+    for _ in range(maxiter):
+        order = np.argsort(f, kind="stable")
+        simplex, f = simplex[order], f[order]
+        if abs(f[-1] - f[0]) <= fatol:
+            break
+        centroid = simplex[:-1].mean(0)
+        xr = centroid + (centroid - simplex[-1])           # reflect
+        fr = loss(xr)
+        if fr < f[0]:
+            xe = centroid + 2.0 * (centroid - simplex[-1])  # expand
+            fe = loss(xe)
+            simplex[-1], f[-1] = (xe, fe) if fe < fr else (xr, fr)
+        elif fr < f[-2]:
+            simplex[-1], f[-1] = xr, fr
+        else:
+            xc = centroid + 0.5 * (simplex[-1] - centroid)  # contract
+            fc = loss(xc)
+            if fc < f[-1]:
+                simplex[-1], f[-1] = xc, fc
+            else:                                           # shrink
+                simplex[1:] = simplex[0] + 0.5 * (simplex[1:] - simplex[0])
+                f[1:] = [loss(v) for v in simplex[1:]]
+    return simplex[int(np.argmin(f))]
 
 
 DEFAULT_MODEL = InterferenceModel()

@@ -32,7 +32,10 @@ from __future__ import annotations
 import functools
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
+
+if TYPE_CHECKING:
+    from repro.calibration.profile import CalibrationProfile
 
 import numpy as np
 
@@ -96,6 +99,14 @@ class TuneSpec:
     # tuples) — takes precedence over kernel_tune; mainly for tests and
     # benchmarks that want a pinned, reproducible kernel sweep.
     kernel_grid: Optional[Tuple[Tuple[int, int, int, int], ...]] = None
+    # Measured calibration profile (repro.calibration; docs/calibration.md):
+    # fitted per-platform CostParams / InterferenceModel overrides layered
+    # over the tuner's cp.  Lives on the SPEC, not the tuner kwargs, because
+    # sweep workers rebuild MistTuner from the pickled spec — a profile
+    # passed only to the parent tuner would silently not propagate.  None
+    # (and the no-override DEFAULT_PROFILE) keep today's constants exactly,
+    # so golden plans are byte-identical.
+    profile: Optional["CalibrationProfile"] = None
 
 
 @dataclass
@@ -147,6 +158,10 @@ class MistTuner:
         if spec.backend not in BACKENDS:
             raise ValueError(f"unknown backend {spec.backend!r}; "
                              f"have {BACKENDS}")
+        if spec.profile is not None:
+            # fitted constants layered over cp; workers rebuilding from the
+            # pickled spec apply the identical overrides (determinism)
+            cp = spec.profile.cost_params(cp)
         self.spec, self.hw, self.cp = spec, hw, cp
         self._scm_cache: Dict[Tuple[bool, bool], StageCostModel] = {}
         # cross-(S, G) frontier memo: identical stage hypotheses (same
@@ -180,10 +195,15 @@ class MistTuner:
     def scm(self, has_embed: bool, has_head: bool) -> StageCostModel:
         key = (has_embed, has_head)
         if key not in self._scm_cache:
+            # self.cp already carries the profile's CostParams overrides
+            # (applied in __init__, so kernel_grid()/sweep workers see them
+            # too); passing the profile again is idempotent — the overrides
+            # are absolute values — and additionally applies the profile's
+            # interference table and jax_auto_threshold pin
             self._scm_cache[key] = StageCostModel(
                 self.spec.arch, self.spec.seq_len, hw=self.hw, cp=self.cp,
                 has_embed=has_embed, has_head=has_head,
-                backend=self.spec.backend)
+                profile=self.spec.profile, backend=self.spec.backend)
         return self._scm_cache[key]
 
     def stage_counts(self) -> List[int]:

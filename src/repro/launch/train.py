@@ -35,6 +35,13 @@ def main():
     ap.add_argument("--plan-json", default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="train the reduced config on host devices")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="measure this arch's reduced golden cells on the "
+                         "host devices and fit a per-platform "
+                         "CalibrationProfile (docs/calibration.md)")
+    ap.add_argument("--calibration-out", default=None, metavar="PATH|auto",
+                    help="with --calibrate: persist the fitted profile "
+                         "(auto = the platform's default cache location)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=10)
     args = ap.parse_args()
@@ -44,6 +51,17 @@ def main():
 
     cfg = get_arch(args.arch)
     shape = ShapeConfig("cli", args.seq, args.global_batch, "train")
+
+    if args.calibrate:
+        from repro.calibration.driver import format_table, run_calibration
+        report = run_calibration(archs=(args.arch,),
+                                 steps=min(args.steps, 6),
+                                 write_profile=args.calibration_out)
+        print(format_table(report))
+        if report.get("error"):
+            return 1
+        return 0 if (report["mean_err_fitted"]
+                     <= report["mean_err_uncalibrated"] + 1e-12) else 1
 
     plan = None
     if args.plan_json:

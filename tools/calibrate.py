@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Measurement-driven calibration of the cost model's time-side constants.
+
+Closes the tune→execute→measure loop (docs/calibration.md): runs the
+golden cells end-to-end through ``lower_plan`` → ``make_train_step`` on
+the live devices, measures warmed median step times + allocator stats,
+fits ``CostParams`` / ``InterferenceModel.factors`` (and, with
+``--kernels``, the ``KernelCoeffs`` anchors via the Pallas bench cache),
+and prints the predicted-vs-measured error table before and after
+fitting.  ``--write-profile`` persists the fitted per-platform
+``CalibrationProfile`` where ``StageCostModel`` / ``TuneSpec`` load it.
+
+Usage:
+    PYTHONPATH=src python tools/calibrate.py [--smoke] [--json PATH]
+        [--write-profile PATH|auto] [--devices N] [--archs a,b]
+
+Exit status is nonzero if fitting made the mean error WORSE than the
+uncalibrated defaults (the keep-if-better guard makes that a bug, not a
+bad-measurement outcome).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--archs", default="granite-3-8b,qwen2-moe-a2.7b",
+                    help="comma-separated golden archs to measure")
+    ap.add_argument("--steps", type=int, default=6)
+    ap.add_argument("--warmup", type=int, default=2)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--devices", type=int, default=None,
+                    help="force N host devices via XLA_FLAGS (must run "
+                         "before jax initializes; >1 exercises the "
+                         "collective items)")
+    ap.add_argument("--platform", default=None,
+                    help="profile platform key (default: jax backend)")
+    ap.add_argument("--no-interference", action="store_true",
+                    help="skip the InterferenceModel.factors refit")
+    ap.add_argument("--kernels", action="store_true",
+                    help="also anchor KernelCoeffs *_scale via the "
+                         "kernels.autotune bench cache")
+    ap.add_argument("--write-profile", default=None, metavar="PATH|auto",
+                    help="persist the fitted profile (auto = the "
+                         "platform's default cache location)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the full report artifact")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: 2 host devices, 2 cells/arch, "
+                         "3 timed steps")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.steps = min(args.steps, 3)
+        args.warmup = min(args.warmup, 1)
+        if args.devices is None:
+            args.devices = 2
+    if args.devices:
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count="
+            f"{args.devices}").strip()
+
+    # import only after XLA_FLAGS is set — jax reads it at first import
+    from repro.calibration.driver import (format_table, run_calibration,
+                                          write_report)
+
+    report = run_calibration(
+        archs=tuple(a for a in args.archs.split(",") if a),
+        steps=args.steps, warmup=args.warmup, seq_len=args.seq_len,
+        platform=args.platform, fit_interference=not args.no_interference,
+        fit_kernels=args.kernels, write_profile=args.write_profile,
+        max_cells_per_arch=2 if args.smoke else None)
+    print(format_table(report))
+    if args.json:
+        write_report(report, args.json)
+        print(f"wrote {args.json}")
+    if report.get("error"):
+        return 1
+    worse = (report["mean_err_fitted"]
+             > report["mean_err_uncalibrated"] + 1e-12)
+    return 1 if worse else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
