@@ -35,6 +35,14 @@ to a specific term).  The --json document carries the full per-config
 comparison, including the per-term breakdown, as the
 `predicted_vs_lowered_memory` table (uploaded as a CI artifact).
 
+A sixth, opt-in measurement (`run_distributed_speedup`, flags
+--distributed / --distributed-only) covers the distributed executor
+(docs/distributed-sweep.md): one golden cell tuned cold-serial, fanned
+out to two real `tools/tune_worker.py` daemon processes over the socket
+RPC (byte-identical plan asserted), and answered warm from a persistent
+`MemoStore` — the warm path is asserted >= 100x faster than the cold
+sweep.
+
 Run with --smoke for a CI-sized invocation; --json PATH additionally
 writes the emitted rows as a JSON document (uploaded as a CI artifact).
 """
@@ -306,6 +314,105 @@ def run_memory_agreement(table: List[dict] = None) -> List[str]:
     return rows
 
 
+def _spawn_tune_worker(repo_root, timeout: float = 60.0):
+    """Launch `tools/tune_worker.py --port 0` as a subprocess and return
+    (Popen, "host:port") once it prints its bound address."""
+    import os
+    import subprocess
+    import sys as _sys
+
+    env = dict(os.environ)
+    src = str(repo_root / "src")
+    env["PYTHONPATH"] = src + os.pathsep * bool(env.get("PYTHONPATH")) \
+        + env.get("PYTHONPATH", "")
+    proc = subprocess.Popen(
+        [_sys.executable, str(repo_root / "tools" / "tune_worker.py"),
+         "--port", "0"],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, env=env,
+        text=True, bufsize=1)
+    t0 = time.perf_counter()
+    line = proc.stdout.readline()
+    if "listening on" not in line or time.perf_counter() - t0 > timeout:
+        proc.kill()
+        raise RuntimeError(f"tune_worker failed to start: {line!r}")
+    return proc, line.rsplit(" ", 1)[-1].strip()
+
+
+def run_distributed_speedup(repeats: int = 3) -> List[str]:
+    """The distributed table (docs/distributed-sweep.md): one golden cell
+    tuned cold-serial, fanned out to two real `tools/tune_worker.py`
+    daemon processes over the socket RPC, and served warm from a
+    persistent memo store — with every variant's plan asserted identical
+    to serial, and the warm-memo path asserted >= 100x faster than the
+    cold sweep (the ROADMAP "milliseconds when warm" target)."""
+    import pathlib
+    import tempfile
+
+    from repro.configs.base import ShapeConfig, get_arch
+    from repro.core import golden, remote
+    from repro.core.tuner import MistTuner, TuneSpec
+
+    w = golden._WORKLOAD
+    arch = get_arch(golden.GOLDEN_ARCHS[0])
+    base = dict(arch=arch, seq_len=w["seq_len"],
+                global_batch=w["global_batch"], n_devices=w["n_devices"],
+                space="mist", stage_counts=w["stage_counts"],
+                grad_accums=w["grad_accums"])
+
+    def best_of(n, **kw):
+        rep, best = None, float("inf")
+        for _ in range(n):
+            t0 = time.perf_counter()
+            rep = MistTuner(TuneSpec(**base, **kw)).tune()
+            best = min(best, time.perf_counter() - t0)
+        return rep, best
+
+    ser, t_ser = best_of(repeats, workers=0)
+
+    repo_root = pathlib.Path(__file__).resolve().parent.parent
+    procs_addrs = [_spawn_tune_worker(repo_root) for _ in range(2)]
+    try:
+        hosts = tuple(a for _p, a in procs_addrs)
+        dist, t_dist = best_of(repeats, workers=2, hosts=hosts)
+        assert dist.objective == ser.objective and dist.plan == ser.plan \
+            and dist.per_sg == ser.per_sg, "multi-host plan diverged"
+        assert dist.hosts_used == 2 and dist.n_host_failures == 0, \
+            (dist.hosts_used, dist.n_host_failures)
+    finally:
+        for proc, addr in procs_addrs:
+            try:
+                remote.request(addr, "shutdown", timeout=5, retries=0)
+            except Exception:
+                proc.kill()
+            proc.wait(timeout=10)
+
+    with tempfile.TemporaryDirectory() as memo_dir:
+        cold, t_cold = best_of(1, memo_dir=memo_dir)
+        assert not cold.from_memo
+        warm, t_warm = best_of(repeats, memo_dir=memo_dir)
+        assert warm.from_memo, "second tune() missed the report cache"
+        assert warm.plan == ser.plan and warm.objective == ser.objective, \
+            "memo-store plan diverged"
+        speedup = t_cold / t_warm
+        assert speedup >= 100, \
+            f"warm memo path only {speedup:.0f}x faster than cold"
+
+    return [
+        emit("tuning_time/distributed_serial", t_ser * 1e6,
+             f"seconds={t_ser:.2f} workers=0"),
+        emit("tuning_time/distributed_hosts2", t_dist * 1e6,
+             f"seconds={t_dist:.2f} hosts=2 workers=2 "
+             f"host_failures={dist.n_host_failures} identical_plan=True"),
+        emit("tuning_time/distributed_memo_cold", t_cold * 1e6,
+             f"seconds={t_cold:.2f} memo_store=cold"),
+        emit("tuning_time/distributed_memo_warm", t_warm * 1e6,
+             f"seconds={t_warm:.5f} from_memo=True"),
+        emit("tuning_time/distributed_speedup", 0.0,
+             f"{speedup:.0f}x warm-memo {t_ser / t_dist:.2f}x hosts2 "
+             f"identical_plans=True"),
+    ]
+
+
 def run_batch_speedup(size: str = "6.7b") -> List[str]:
     """Batched symbolic substitution vs per-config evaluation loop."""
     cfg = gpt_config(size)
@@ -363,8 +470,18 @@ def rows_to_json(rows: List[str], mem_table: List[dict] = None) -> dict:
 
 
 if __name__ == "__main__":
-    mem_table = memory_agreement_table()   # computed once, used twice
-    rows = run(smoke="--smoke" in sys.argv, mem_table=mem_table)
+    # --distributed appends the multi-host + memo-store table
+    # (docs/distributed-sweep.md) to the standard run; --distributed-only
+    # runs just that table (the CI fan-out smoke job), skipping the
+    # memory-agreement recomputation.  Both ride the --json artifact.
+    if "--distributed-only" in sys.argv:
+        mem_table: List[dict] = []
+        rows = run_distributed_speedup()
+    else:
+        mem_table = memory_agreement_table()   # computed once, used twice
+        rows = run(smoke="--smoke" in sys.argv, mem_table=mem_table)
+        if "--distributed" in sys.argv:
+            rows += run_distributed_speedup()
     if "--json" in sys.argv:
         path = sys.argv[sys.argv.index("--json") + 1]
         with open(path, "w") as f:

@@ -89,6 +89,18 @@ class CalibrationProfile:
             jax_auto_threshold=(None if jax_auto_threshold is None
                                 else int(jax_auto_threshold)))
 
+    # -- incremental updates -------------------------------------------------
+    def with_cost(self, **overrides) -> "CalibrationProfile":
+        """This profile with additional/updated ``CostParams`` overrides
+        merged in (e.g. ``runtime_reserved`` from
+        ``tools/calibrate_reserved.py`` folding into a profile fitted by
+        ``tools/calibrate.py``).  Field names are validated; existing
+        overrides for other fields are preserved."""
+        merged = dict(self.cost)
+        merged.update(overrides)
+        return dataclasses.replace(
+            self, cost=_as_overrides(merged, COST_FIELDS, "CostParams"))
+
     # -- application ---------------------------------------------------------
     def cost_params(self, base: CostParams = CostParams()) -> CostParams:
         """``base`` with this profile's overrides applied.  The no-override

@@ -154,11 +154,39 @@ def host_memory_kind():
     return "pinned_host" if "pinned_host" in kinds else None
 
 
+def jax_version() -> Tuple[int, ...]:
+    """jax's version as an int tuple ((0,) when jax is absent or the
+    version string is exotic).  Capability gates that guard against
+    *bundled-XLA* behavior — which no Python-API probe can see — compare
+    against this."""
+    if jax is None:
+        return (0,)
+    out = []
+    for part in str(getattr(jax, "__version__", "0")).split("."):
+        digits = ""
+        for c in part:  # digits *prefix*: "37rc1" is 37, not 371
+            if not c.isdigit():
+                break
+            digits += c
+        if not digits:
+            break
+        out.append(int(digits))
+    return tuple(out) or (0,)
+
+
 def supports_pipeline_stage_mapping() -> bool:
     """Whether this jax can run the pipeline executor's partial-manual
     shard_map (scan + ppermute over a manual 'stage' axis with auto
-    data/model axes).  On jax 0.4.x the bundled XLA SPMD partitioner hard
-    CHECK-fails on that pattern (hlo_sharding_util IsManualSubgroup), so
-    the pipeline train step is gated to newer jax; single-stage SPMD,
-    tuning, and all analysis paths are unaffected."""
-    return hasattr(jax, "shard_map")
+    data/model axes).  On jax 0.4.x — including the container's pinned
+    0.4.37 — the bundled XLA SPMD partitioner hard CHECK-fails on that
+    pattern (hlo_sharding_util IsManualSubgroup), so the pipeline train
+    step is gated to jax >= 0.5; single-stage SPMD, tuning, and all
+    analysis paths are unaffected.
+
+    The version floor is checked EXPLICITLY, not inferred from
+    ``hasattr(jax, "shard_map")``: the crash lives in the bundled XLA,
+    not the Python API, so a 0.4.x that aliased ``shard_map`` to the
+    top level (or a test monkeypatch) must still be rejected.  The API
+    probe stays as the second conjunct because the executor also needs
+    the new ``axis_names``/``check_vma`` spelling's semantics."""
+    return jax_version() >= (0, 5) and hasattr(jax, "shard_map")

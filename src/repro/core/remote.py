@@ -1,0 +1,268 @@
+"""Minimal length-prefixed socket RPC for the distributed sweep fan-out.
+
+The sweep executor (core/sweep.py) ships self-contained
+(spec, knobs, plan, unit-shard) payloads to remote executor daemons
+(`tools/tune_worker.py`) and merges the returned frontier-memo shards at
+the join.  This module is the transport: stdlib-only TCP framing, a
+one-request-per-connection client with connect/data timeouts and
+bounded retries, and a tiny threaded server both daemons
+(`tools/tune_worker.py`, `tools/tune_service.py`) are built on.
+
+Wire contract (docs/distributed-sweep.md):
+
+  frame    = MAGIC (4 bytes, b"MST1") + len (8 bytes, big-endian) + body
+  body     = pickle of a tuple
+  request  = (op: str, *args)
+  response = ("ok", result) | ("err", traceback_string)
+
+One frame each way per TCP connection, then close — payloads are few and
+large (unit shards, frontier memos), so connection setup is noise, and
+the one-shot discipline makes failure semantics trivial: any socket
+error, timeout, or short read is THE failure signal for that request; no
+half-open protocol states exist.  Failures surface as ``RemoteError``
+(server-side exceptions carry the remote traceback) or the underlying
+``OSError``; `sweep_on_hosts` maps either to "this host's shards re-run
+locally", preserving the byte-identical-plan guarantee.
+
+Pickle is the serialization deliberately: payloads already cross the
+local fork-pool boundary pickled (hash-consed Exprs re-intern through
+``__reduce__``), and the daemons are trusted executors the user starts
+on their own hosts — this is an intra-cluster tool, not an internet
+service (bind daemons to trusted interfaces only).
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import socket
+import socketserver
+import threading
+import time
+import traceback
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+MAGIC = b"MST1"
+MAX_FRAME = 1 << 31            # 2 GiB sanity bound on one frame
+
+# Data-phase timeout covers remote sweep compute; connect is kept short so
+# a dead host fails fast (both env-overridable for clusters with different
+# latency envelopes, and monkeypatchable in tests).
+CONNECT_TIMEOUT = float(os.environ.get("REPRO_RPC_CONNECT_TIMEOUT", "5"))
+CALL_TIMEOUT = float(os.environ.get("REPRO_RPC_TIMEOUT", "600"))
+RETRIES = int(os.environ.get("REPRO_RPC_RETRIES", "1"))
+RETRY_BACKOFF_S = 0.2
+
+
+class RemoteError(RuntimeError):
+    """A daemon answered with ("err", traceback) — the remote traceback is
+    the exception message."""
+
+
+def parse_addr(addr: str) -> Tuple[str, int]:
+    """"host:port" -> (host, port); bare ":port" means localhost."""
+    host, _, port = addr.rpartition(":")
+    if not port.isdigit():
+        raise ValueError(f"malformed host address {addr!r}; want host:port")
+    return host or "127.0.0.1", int(port)
+
+
+def send_frame(sock: socket.socket, obj) -> None:
+    body = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    if len(body) > MAX_FRAME:
+        raise ValueError(f"frame too large: {len(body)} bytes")
+    sock.sendall(MAGIC + len(body).to_bytes(8, "big") + body)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(min(n - len(buf), 1 << 20))
+        if not chunk:
+            raise ConnectionError(
+                f"connection closed mid-frame ({len(buf)}/{n} bytes)")
+        buf += chunk
+    return bytes(buf)
+
+
+def recv_frame(sock: socket.socket):
+    head = _recv_exact(sock, len(MAGIC) + 8)
+    if head[:len(MAGIC)] != MAGIC:
+        raise ConnectionError(f"bad frame magic {head[:len(MAGIC)]!r}")
+    n = int.from_bytes(head[len(MAGIC):], "big")
+    if n > MAX_FRAME:
+        raise ConnectionError(f"frame length {n} exceeds bound")
+    return pickle.loads(_recv_exact(sock, n))
+
+
+def request(addr: str, op: str, *args,
+            timeout: Optional[float] = None,
+            connect_timeout: Optional[float] = None,
+            retries: Optional[int] = None):
+    """One RPC round trip with bounded retries.
+
+    Retries re-send the whole request — safe because every daemon op is
+    either read-only (ping/stats) or a pure function of its payload
+    (sweep/tune: recomputing a shard returns bitwise-identical results),
+    so at-least-once delivery cannot corrupt state."""
+    host, port = parse_addr(addr)
+    attempts = (RETRIES if retries is None else retries) + 1
+    last: Optional[Exception] = None
+    for i in range(attempts):
+        if i:
+            time.sleep(RETRY_BACKOFF_S * i)
+        try:
+            with socket.create_connection(
+                    (host, port),
+                    timeout=(CONNECT_TIMEOUT if connect_timeout is None
+                             else connect_timeout)) as sock:
+                sock.settimeout(CALL_TIMEOUT if timeout is None else timeout)
+                send_frame(sock, (op,) + args)
+                status, payload = recv_frame(sock)
+            if status == "err":
+                raise RemoteError(f"{addr} {op}: {payload}")
+            return payload
+        except RemoteError:
+            raise               # the handler ran and failed: not transient
+        except (OSError, ConnectionError, EOFError,
+                pickle.UnpicklingError) as exc:
+            last = exc
+    raise ConnectionError(
+        f"no response from {addr} after {attempts} attempt(s): {last}")
+
+
+# ---------------------------------------------------------------------------
+# server
+# ---------------------------------------------------------------------------
+
+
+class RpcServer:
+    """Threaded one-frame-per-connection RPC server.
+
+    ``handlers`` maps op name -> callable(*args).  A "shutdown" op is
+    built in (reply, then stop the serve loop) so tests and the CLI
+    daemons can be torn down remotely; "ping" answers with a small info
+    dict unless the caller installs its own."""
+
+    def __init__(self, handlers: Dict[str, Callable], *,
+                 host: str = "127.0.0.1", port: int = 0):
+        outer = self
+
+        class Handler(socketserver.BaseRequestHandler):
+            def handle(self):
+                try:
+                    msg = recv_frame(self.request)
+                except (ConnectionError, EOFError, pickle.UnpicklingError):
+                    return          # port-scan / client died: nothing to say
+                op, args = msg[0], msg[1:]
+                if op == "shutdown":
+                    send_frame(self.request, ("ok", "bye"))
+                    threading.Thread(target=outer.server.shutdown,
+                                     daemon=True).start()
+                    return
+                fn = outer.handlers.get(op)
+                try:
+                    if fn is None:
+                        raise KeyError(f"unknown op {op!r}; "
+                                       f"have {sorted(outer.handlers)}")
+                    send_frame(self.request, ("ok", fn(*args)))
+                except Exception:
+                    try:
+                        send_frame(self.request,
+                                   ("err", traceback.format_exc()))
+                    except OSError:
+                        pass    # client gone: drop the error on the floor
+
+        class Server(socketserver.ThreadingTCPServer):
+            allow_reuse_address = True
+            daemon_threads = True
+
+        self.handlers = dict(handlers)
+        self.handlers.setdefault("ping", lambda: {"pid": os.getpid()})
+        self.server = Server((host, port), Handler)
+        self.addr = "%s:%d" % self.server.server_address[:2]
+        self._thread: Optional[threading.Thread] = None
+
+    def serve_forever(self):
+        self.server.serve_forever(poll_interval=0.1)
+
+    def start_in_thread(self) -> threading.Thread:
+        t = threading.Thread(target=self.serve_forever, daemon=True)
+        t.start()
+        self._thread = t
+        return t
+
+    def shutdown(self):
+        self.server.shutdown()
+        self.server.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+
+
+# ---------------------------------------------------------------------------
+# sweep fan-out client
+# ---------------------------------------------------------------------------
+
+
+def host_assignments(n_shards: int, hosts: Sequence[str]
+                     ) -> List[Tuple[str, List[int]]]:
+    """Round-robin shard indices over hosts, deterministically: host j
+    serves shards j, j+len(hosts), ...  (shards are already packed by
+    estimated cost, so round-robin keeps per-host load even)."""
+    out = [(h, list(range(j, n_shards, len(hosts))))
+           for j, h in enumerate(hosts)]
+    return [(h, idxs) for h, idxs in out if idxs]
+
+
+def sweep_on_hosts(spec, knobs, plan, shards: Sequence[Sequence[int]],
+                   hosts: Sequence[str], *,
+                   timeout: Optional[float] = None,
+                   retries: Optional[int] = None
+                   ) -> Tuple[Dict[int, tuple], List[int]]:
+    """Fan the unit shards out to remote executor daemons.
+
+    Returns ``(outs, failed)``: ``outs`` maps shard index -> the
+    (memo-shard, n_swept, hits, misses) tuple the daemon computed —
+    bitwise identical to a local worker's, because the daemon runs the
+    same ``_sweep_units`` body on the numpy backend — and ``failed``
+    lists shard indices whose host stayed unreachable after retries
+    (the caller re-runs those locally: graceful degradation, identical
+    results)."""
+    import dataclasses
+    from concurrent.futures import ThreadPoolExecutor
+
+    # self-contained payload spec: execution-routing fields are stripped
+    # so a daemon's worker-tuner cache key does not fracture across
+    # clients that differ only in how they route the sweep
+    spec = dataclasses.replace(spec, backend="numpy", hosts=None,
+                               memo_dir=None, workers=1)
+    assignments = host_assignments(len(shards), hosts)
+    outs: Dict[int, tuple] = {}
+    failed: List[int] = []
+
+    def one(host: str, idxs: List[int]) -> List[tuple]:
+        payload = pickle.dumps(
+            (spec, knobs, plan, [list(shards[i]) for i in idxs]),
+            protocol=pickle.HIGHEST_PROTOCOL)
+        return pickle.loads(request(host, "sweep", payload,
+                                    timeout=timeout, retries=retries))
+
+    with ThreadPoolExecutor(max_workers=max(1, len(assignments))) as ex:
+        futs = [(host, idxs, ex.submit(one, host, idxs))
+                for host, idxs in assignments]
+        for host, idxs, fut in futs:
+            try:
+                results = fut.result()
+                if len(results) != len(idxs):
+                    raise RemoteError(
+                        f"{host}: {len(results)} shard results for "
+                        f"{len(idxs)} shards")
+                for i, res in zip(idxs, results):
+                    outs[i] = res
+            except (ConnectionError, OSError, RemoteError,
+                    pickle.UnpicklingError, EOFError) as exc:
+                import warnings
+                warnings.warn(f"sweep host {host} failed ({exc}); its "
+                              f"{len(idxs)} shard(s) fall back to the "
+                              "local executor", RuntimeWarning)
+                failed.extend(idxs)
+    return outs, sorted(failed)

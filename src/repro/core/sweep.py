@@ -18,7 +18,11 @@ into an explicit three-phase plan:
      persistent pool of forked worker processes; the shard key groups
      same-(layers, n_dev, role) units so the knob-tuple cache (the time
      tape is inflight-independent) keeps hitting inside a worker.  Each
-     worker returns its frontier-memo shard.
+     worker returns its frontier-memo shard.  With `hosts`, shards
+     additionally fan out over the RPC transport (`core/remote.py`) to
+     `tools/tune_worker.py` daemons — same `_sweep_units` body, same
+     shards, different processes — and unreachable hosts degrade to the
+     local path (docs/distributed-sweep.md).
   3. **Join**: merge the shards into the tuner's `_frontier_memo`.  The
      (S, G) loop then runs unchanged in the parent — every `_frontier`
      call is a memo hit — followed by the per-cell MILPs and the exact
@@ -45,7 +49,7 @@ import atexit
 import multiprocessing as mp
 import pickle
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.intra_stage import (IntraStageResult, pareto_front,
                                     refine_fronts_batched,
@@ -64,6 +68,8 @@ class SweepStats:
     cache_misses: int = 0
     workers_used: int = 1
     memo_entries: int = 0
+    hosts_used: int = 0         # remote daemons that served >= 1 shard
+    n_host_failures: int = 0    # shards that fell back to local execution
 
 
 @dataclass(frozen=True)
@@ -267,8 +273,11 @@ def _pool_task(payload: bytes):
     # can deadlock (see _start_method), and every backend returns
     # bitwise-identical frontiers anyway (tests/test_tape_backends.py),
     # so the substitution is invisible in the merged memo.  Normalizing
-    # the spec also lets jax/numpy spec variants share one worker tuner.
-    spec = dataclasses.replace(spec, backend="numpy")
+    # the spec — including the execution-routing fields hosts/memo_dir/
+    # workers, which never affect a unit's frontier — lets every spec
+    # variant that differs only in routing share one worker tuner.
+    spec = dataclasses.replace(spec, backend="numpy", hosts=None,
+                               memo_dir=None, workers=1)
     key = pickle.dumps((spec, knobs))
     if _WORKER_TUNER["key"] != key:
         from repro.core.tuner import MistTuner
@@ -359,10 +368,66 @@ def solve_cells(jobs, *, total_layers: int, total_devices: int,
             for S, G, cands in jobs}
 
 
+def _sweep_local(tuner, plan: SweepPlan, knobs,
+                 unit_idxs: Sequence[int]) -> Tuple[list, int, int, int]:
+    """In-process `_sweep_units` on the parent tuner, with the same
+    (shard, n_swept, hits, misses) shape a pool/remote worker returns."""
+    base_h = sum(m.cache_hits for m in tuner._scm_cache.values())
+    base_m = sum(m.cache_misses for m in tuner._scm_cache.values())
+    shard, n_swept = _sweep_units(tuner, plan, knobs, list(unit_idxs))
+    hits = sum(m.cache_hits for m in tuner._scm_cache.values()) - base_h
+    misses = sum(m.cache_misses for m in tuner._scm_cache.values()) - base_m
+    return shard, n_swept, hits, misses
+
+
+def _sweep_over_hosts(tuner, plan: SweepPlan, knobs, workers: int,
+                      hosts: Sequence[str], stats: SweepStats) -> None:
+    """Multi-host fan-out (docs/distributed-sweep.md): shard the plan into
+    len(hosts) x workers lanes, ship each host its round-robin share of
+    shards over the RPC transport, re-run any failed host's shards
+    locally, and merge all shards in ascending shard-index order.
+
+    Every unit lands in exactly one shard and every shard is computed by
+    the same `_sweep_units` body wherever it runs, so the merged memo is
+    bitwise identical to the serial engine's — host count, host failures
+    and all (tests/test_distributed.py)."""
+    from repro.core.remote import host_assignments, sweep_on_hosts
+    n_lanes = max(1, len(hosts) * workers)
+    shards = _shard_units(plan, n_lanes) if n_lanes > 1 \
+        else [list(range(len(plan)))]
+    outs, failed = sweep_on_hosts(tuner.spec, knobs, plan, shards, hosts)
+    failed_set = set(failed)
+    stats.hosts_used = sum(
+        1 for _h, idxs in host_assignments(len(shards), hosts)
+        if idxs and not failed_set.intersection(idxs))
+    stats.n_host_failures = len(failed)
+    if failed:
+        # graceful degradation: unreachable hosts' shards re-run locally —
+        # on the fork pool when one is usable, else in-process
+        if workers > 1 and len(failed) > 1 and _start_method() is not None:
+            pool = _get_pool(workers)
+            payloads = [pickle.dumps((tuner.spec, knobs, plan, shards[i]))
+                        for i in failed]
+            for i, out in zip(failed, pool.map(_pool_task, payloads)):
+                outs[i] = out
+        else:
+            for i in failed:
+                outs[i] = _sweep_local(tuner, plan, knobs, shards[i])
+    stats.workers_used = max(1, len(shards))
+    for i in range(len(shards)):
+        shard, n_swept, hits, misses = outs[i]
+        tuner._frontier_memo.update(shard)
+        stats.n_swept += n_swept
+        stats.cache_hits += hits
+        stats.cache_misses += misses
+
+
 def prefetch_frontiers(tuner, cells: Sequence[Tuple[int, int]], knobs,
-                       workers: int = 1) -> SweepStats:
-    """Phases 1-3: plan units, execute (in-process or across the worker
-    pool), merge the frontier-memo shards into `tuner._frontier_memo`.
+                       workers: int = 1,
+                       hosts: Optional[Sequence[str]] = None) -> SweepStats:
+    """Phases 1-3: plan units, execute (in-process, across the worker
+    pool, or fanned out to remote `hosts` daemons), merge the
+    frontier-memo shards into `tuner._frontier_memo`.
 
     After this returns, the tuner's (S, G) loop runs entirely from the
     memo; results are identical to the un-prefetched serial engine."""
@@ -372,6 +437,10 @@ def prefetch_frontiers(tuner, cells: Sequence[Tuple[int, int]], knobs,
         stats.memo_entries = len(tuner._frontier_memo)
         return stats
     workers = max(1, int(workers))
+    if hosts:
+        _sweep_over_hosts(tuner, plan, knobs, workers, tuple(hosts), stats)
+        stats.memo_entries = len(tuner._frontier_memo)
+        return stats
     shards = _shard_units(plan, workers) if workers > 1 else \
         [list(range(len(plan)))]
     use_pool = len(shards) > 1 and _start_method() is not None

@@ -99,6 +99,22 @@ class TuneSpec:
     # tuples) — takes precedence over kernel_tune; mainly for tests and
     # benchmarks that want a pinned, reproducible kernel sweep.
     kernel_grid: Optional[Tuple[Tuple[int, int, int, int], ...]] = None
+    # Multi-host sweep fan-out (core/remote.py; docs/distributed-sweep.md):
+    # "host:port" addresses of running `tools/tune_worker.py` daemons.
+    # When set, the sweep executor shards units into len(hosts) x workers
+    # lanes and ships each host its share over the stdlib socket RPC;
+    # unreachable hosts degrade gracefully to the local pool.  The
+    # selected plan is byte-identical at every (workers, hosts) setting
+    # (asserted in tests/test_distributed.py).
+    hosts: Optional[Tuple[str, ...]] = None
+    # Persistent content-addressed memo store (core/memo_store.py):
+    # directory where frontier-memo units and whole tune reports are
+    # cached across processes.  Warm stage hypotheses are preloaded
+    # before planning (plan_units drops them from the sweep) and a warm
+    # whole-query report short-circuits tune() entirely
+    # (TuneReport.from_memo).  Purely an execution accelerator: results
+    # are byte-identical with or without it.
+    memo_dir: Optional[str] = None
     # Measured calibration profile (repro.calibration; docs/calibration.md):
     # fitted per-platform CostParams / InterferenceModel overrides layered
     # over the tuner's cp.  Lives on the SPEC, not the tuner kwargs, because
@@ -128,6 +144,10 @@ class TuneReport:
     workers: int = 1            # sweep-executor worker processes used
     n_cache_hits: int = 0       # knob-tuple tape-cache hits (executor path)
     n_cache_misses: int = 0
+    hosts_used: int = 0         # remote sweep daemons that served shards
+    n_host_failures: int = 0    # shards that fell back to local execution
+    n_store_hits: int = 0       # frontiers preloaded from the memo store
+    from_memo: bool = False     # whole report served by the memo store
 
 
 def _space_knobs(space: str, layers: int) -> Dict:
@@ -307,14 +327,37 @@ class MistTuner:
                 if not self.spec.global_batch % G]
 
     # -- main ----------------------------------------------------------------
+    def _store(self):
+        """The persistent memo store, or None (spec.memo_dir unset)."""
+        if self.spec.memo_dir is None:
+            return None
+        if getattr(self, "_memo_store", None) is None:
+            from repro.core.memo_store import MemoStore
+            self._memo_store = MemoStore(self.spec.memo_dir)
+        return self._memo_store
+
     def tune(self) -> TuneReport:
+        import dataclasses
         spec = self.spec
+        t0 = time.time()
+        store = self._store()
+        if store is not None:
+            # warm whole-query path: the report key ignores execution-
+            # routing fields (engine/backend/workers/hosts), which never
+            # change the answer, so any prior computation of this query
+            # serves it — in milliseconds (docs/distributed-sweep.md)
+            hit = store.load_report(self)
+            if hit is not None:
+                return dataclasses.replace(
+                    hit, tune_seconds=time.time() - t0, from_memo=True)
         if spec.space == "serve":
             # inference regime: KV-cache memory + decode/prefill roofline
             # replace the training stage cost model entirely
             from repro.core.serve_space import tune_serve
-            return tune_serve(self)
-        t0 = time.time()
+            rep = tune_serve(self)
+            if store is not None:
+                store.save_report(self, rep)
+            return rep
         knobs = _space_knobs(spec.space, spec.arch.num_layers)
         best: Optional[Tuple[float, int, int, InterStageSolution]] = None
         per_sg = []
@@ -323,16 +366,26 @@ class MistTuner:
         self._memo_hits = 0
         self._n_swept = 0
         sweep_stats = None
+        n_store_hits = 0
         if spec.engine != "legacy" and spec.workers >= 1:
             # (S, G) sweep executor: G-collapsed hypothesis sweeps, run in
-            # process (workers=1) or across forked workers, filling the
-            # frontier memo up front; the loop below then runs entirely
-            # from the memo.  Plan-identical to the plain loop by
-            # construction (see core/sweep.py; tests/test_sweep.py).
+            # process (workers=1), across forked workers, or fanned out to
+            # remote hosts, filling the frontier memo up front; the loop
+            # below then runs entirely from the memo.  Plan-identical to
+            # the plain loop by construction (see core/sweep.py;
+            # tests/test_sweep.py, tests/test_distributed.py).
             from repro.core.sweep import prefetch_frontiers
-            sweep_stats = prefetch_frontiers(self, self._cells(), knobs,
-                                             workers=spec.workers)
+            cells = self._cells()
+            if store is not None:
+                # warm stage hypotheses load into the memo so plan_units
+                # (inside prefetch_frontiers) drops them from the sweep
+                n_store_hits = store.preload(self, cells, knobs)
+            sweep_stats = prefetch_frontiers(self, cells, knobs,
+                                             workers=spec.workers,
+                                             hosts=spec.hosts)
             self._n_swept += sweep_stats.n_swept
+            if store is not None:
+                store.flush(self, cells, knobs)
         # gather each cell's candidate lists (all frontier-memo reads after
         # a prefetch), solve the independent per-cell MILPs — on the worker
         # pool when the executor is parallel — then reduce in loop order,
@@ -371,26 +424,36 @@ class MistTuner:
         workers_used = sweep_stats.workers_used if sweep_stats else 0
         c_hits = sweep_stats.cache_hits if sweep_stats else 0
         c_miss = sweep_stats.cache_misses if sweep_stats else 0
+        hosts_used = sweep_stats.hosts_used if sweep_stats else 0
+        host_fail = sweep_stats.n_host_failures if sweep_stats else 0
         if best is None:
-            return TuneReport(plan=None, objective=float("inf"),
-                              throughput_samples=0.0, throughput_tokens=0.0,
-                              space=spec.space, n_points=self._n_points,
-                              n_milp=n_milp, tune_seconds=dt,
-                              infeasible=True, n_swept=self._n_swept,
-                              n_memo_hits=self._memo_hits,
-                              workers=workers_used, n_cache_hits=c_hits,
-                              n_cache_misses=c_miss)
-        obj, S, G, sol = best
-        plan = self._to_plan(sol, G)
-        return TuneReport(
-            plan=plan, objective=obj,
-            throughput_samples=spec.global_batch / obj,
-            throughput_tokens=spec.global_batch * spec.seq_len / obj,
-            space=spec.space, n_points=self._n_points, n_milp=n_milp,
-            tune_seconds=dt, best_S=S, best_G=G, per_sg=per_sg,
-            n_swept=self._n_swept, n_memo_hits=self._memo_hits,
-            workers=workers_used, n_cache_hits=c_hits,
-            n_cache_misses=c_miss)
+            rep = TuneReport(plan=None, objective=float("inf"),
+                             throughput_samples=0.0, throughput_tokens=0.0,
+                             space=spec.space, n_points=self._n_points,
+                             n_milp=n_milp, tune_seconds=dt,
+                             infeasible=True, n_swept=self._n_swept,
+                             n_memo_hits=self._memo_hits,
+                             workers=workers_used, n_cache_hits=c_hits,
+                             n_cache_misses=c_miss, hosts_used=hosts_used,
+                             n_host_failures=host_fail,
+                             n_store_hits=n_store_hits)
+        else:
+            obj, S, G, sol = best
+            plan = self._to_plan(sol, G)
+            rep = TuneReport(
+                plan=plan, objective=obj,
+                throughput_samples=spec.global_batch / obj,
+                throughput_tokens=spec.global_batch * spec.seq_len / obj,
+                space=spec.space, n_points=self._n_points, n_milp=n_milp,
+                tune_seconds=dt, best_S=S, best_G=G, per_sg=per_sg,
+                n_swept=self._n_swept, n_memo_hits=self._memo_hits,
+                workers=workers_used, n_cache_hits=c_hits,
+                n_cache_misses=c_miss, hosts_used=hosts_used,
+                n_host_failures=host_fail, n_store_hits=n_store_hits)
+        if store is not None:
+            # an infeasible answer is still an answer: cache it too
+            store.save_report(self, rep)
+        return rep
 
     def _solve_uniform(self, S: int, G: int, knobs
                        ) -> Optional[InterStageSolution]:

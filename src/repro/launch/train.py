@@ -32,6 +32,11 @@ def main():
     ap.add_argument("--space", default="mist")
     ap.add_argument("--tune", action="store_true",
                     help="run the Mist tuner and print the plan")
+    ap.add_argument("--memo-dir", default=None,
+                    help="persistent tuning memo store "
+                         "(core/memo_store.py): warm (arch, mesh, batch) "
+                         "queries answer in milliseconds, cold sweeps "
+                         "persist their frontiers for future runs")
     ap.add_argument("--plan-json", default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="train the reduced config on host devices")
@@ -68,13 +73,15 @@ def main():
         plan = Plan.from_json(pathlib.Path(args.plan_json).read_text())
     elif args.tune:
         from repro.core.tuner import tune
-        rep = tune(cfg, shape, args.devices, space=args.space)
+        rep = tune(cfg, shape, args.devices, space=args.space,
+                   memo_dir=args.memo_dir)
         if rep.plan is None:
             print("INFEASIBLE for this device count / batch")
             return 1
         print(f"# tuned in {rep.tune_seconds:.1f}s over {rep.n_points} "
               f"configs; predicted step {rep.objective:.3f}s "
-              f"({rep.throughput_samples:.2f} samples/s)")
+              f"({rep.throughput_samples:.2f} samples/s)"
+              + (" [memo-store hit]" if rep.from_memo else ""))
         print(rep.plan.to_json())
         plan = rep.plan
 

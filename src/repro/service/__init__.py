@@ -1,0 +1,15 @@
+"""Long-lived daemons for distributed tuning (docs/distributed-sweep.md).
+
+`repro.service.worker` — a sweep executor daemon: receives
+(spec, knobs, plan, shards) payloads from a remote `prefetch_frontiers`
+and answers with frontier-memo shards (`tools/tune_worker.py`).
+
+`repro.service.tune_service` — a persistent tuning service: answers
+whole `TuneSpec` queries against an on-disk `MemoStore`, so warm
+(arch, mesh, budget) queries return in milliseconds
+(`tools/tune_service.py`).
+"""
+from repro.service.tune_service import TuneService, tune_remote
+from repro.service.worker import SweepWorker
+
+__all__ = ["SweepWorker", "TuneService", "tune_remote"]

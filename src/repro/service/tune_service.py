@@ -1,0 +1,118 @@
+"""Persistent tuning service: whole tune queries against a shared memo.
+
+The always-on half of ROADMAP item 2.  A `TuneService` daemon holds one
+`MemoStore` directory and serves "tune" RPCs: the payload is a pickled
+`TuneSpec`; the reply is the pickled `TuneReport`.  Every query runs
+with `memo_dir` pointed at the service's store, so
+
+* a warm query — same (arch, shape, devices, space, knobs, profile)
+  modulo execution-routing fields — is answered from the report cache
+  in milliseconds (`TuneReport.from_memo=True`);
+* a cold query sweeps, but any stage hypotheses previously solved for
+  *other* queries (shared sub-grids across spaces, device counts, G
+  sets) are preloaded from the unit store first, and its own frontiers
+  are flushed back for future queries — the frontier memo as a
+  cross-job cache.
+
+Queries serialize through a lock: tune() already parallelizes inside
+(`workers`/`hosts`), and concurrent tuners would fight over the fork
+pool.  `tune_remote` is the client helper; it leaves the caller's spec
+untouched (the service applies its own memo_dir/workers/hosts policy).
+"""
+from __future__ import annotations
+
+import dataclasses
+import pickle
+import threading
+from typing import List, Optional, Tuple
+
+from repro.core.memo_store import MemoStore
+from repro.core.remote import RpcServer, request
+
+
+class TuneService:
+    def __init__(self, memo_dir: str, *, host: str = "127.0.0.1",
+                 port: int = 0, workers: int = 1,
+                 hosts: Optional[Tuple[str, ...]] = None):
+        self.memo_dir = memo_dir
+        self.workers = max(1, int(workers))
+        self.hosts = tuple(hosts) if hosts else None
+        self.store = MemoStore(memo_dir)
+        self._lock = threading.Lock()
+        self.n_queries = 0
+        self.server = RpcServer(
+            {"tune": self._tune, "stats": self._stats},
+            host=host, port=port)
+        self.addr = self.server.addr
+
+    def _stats(self):
+        return {"queries": self.n_queries,
+                "unit_hits": self.store.unit_hits,
+                "unit_misses": self.store.unit_misses,
+                "report_hits": self.store.report_hits,
+                "memo_dir": self.memo_dir}
+
+    def _tune(self, payload: bytes) -> bytes:
+        from repro.core.tuner import MistTuner
+        spec = pickle.loads(payload)
+        # service policy overrides client routing: queries run against the
+        # service's store with the service's execution resources
+        spec = dataclasses.replace(spec, memo_dir=self.memo_dir,
+                                   workers=self.workers, hosts=self.hosts)
+        with self._lock:
+            self.n_queries += 1
+            tuner = MistTuner(spec)
+            rep = tuner.tune()
+            # fold the query's store counters into the service's totals
+            # (each tuner builds its own MemoStore view over the same dir)
+            qs = tuner._store()
+            self.store.unit_hits += qs.unit_hits
+            self.store.unit_misses += qs.unit_misses
+            self.store.report_hits += qs.report_hits
+        return pickle.dumps(rep, protocol=pickle.HIGHEST_PROTOCOL)
+
+    def serve_forever(self):
+        self.server.serve_forever()
+
+    def start_in_thread(self):
+        return self.server.start_in_thread()
+
+    def shutdown(self):
+        self.server.shutdown()
+
+
+def tune_remote(spec, addr: str, *, timeout: Optional[float] = None):
+    """Tune through a running `tools/tune_service.py` daemon; returns the
+    TuneReport exactly as a local `MistTuner(spec).tune()` would."""
+    rep = request(addr, "tune",
+                  pickle.dumps(spec, protocol=pickle.HIGHEST_PROTOCOL),
+                  timeout=timeout)
+    return pickle.loads(rep)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+    p = argparse.ArgumentParser(
+        description="Mist persistent tuning service "
+                    "(docs/distributed-sweep.md)")
+    p.add_argument("--memo-dir", required=True,
+                   help="MemoStore directory (created if absent)")
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=int, default=0,
+                   help="TCP port (0 = ephemeral, printed on stdout)")
+    p.add_argument("--workers", type=int, default=1,
+                   help="sweep-executor fork-pool size per query")
+    p.add_argument("--hosts", default=None,
+                   help="comma-separated tune_worker host:port list to "
+                        "fan sweeps out to")
+    args = p.parse_args(argv)
+    hosts = tuple(h for h in (args.hosts or "").split(",") if h) or None
+    svc = TuneService(args.memo_dir, host=args.host, port=args.port,
+                      workers=args.workers, hosts=hosts)
+    print(f"tune-service listening on {svc.addr} (memo: {args.memo_dir})",
+          flush=True)
+    try:
+        svc.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    return 0

@@ -1,0 +1,99 @@
+"""Sweep executor daemon: the remote end of the multi-host fan-out.
+
+One `SweepWorker` serves "sweep" RPCs (see `repro.core.remote` for the
+wire contract): the payload is pickled (spec, knobs, plan, shards) —
+exactly what `prefetch_frontiers` hands the local fork pool — and the
+response is the pickled list of per-shard
+(memo-shard, n_swept, hits, misses) tuples, computed by the *same*
+`sweep._pool_task` body a local worker runs.  That sharing is the
+determinism argument: a unit's frontier is a pure function of
+(spec, knobs, unit) no matter which process on which host computes it,
+so the client's merge is bitwise identical to a serial sweep.
+
+``workers`` > 1 fans the received shards across the daemon's own local
+fork pool (a host with many cores serves many shards concurrently);
+``workers`` <= 1 runs them inline.  A PROCESS-global lock serializes
+concurrent sweep execution: `_pool_task`'s worker-tuner cache, its tape
+scratch buffers, and the fork pool are module globals, so two sweeps
+interleaving in one process — e.g. two in-thread daemons in a test, or
+two client connections hitting one daemon — would race on shared state
+and corrupt results.  A per-instance lock would not cover the
+two-daemons-one-process case.
+"""
+from __future__ import annotations
+
+import pickle
+import threading
+from typing import List, Optional
+
+from repro.core import sweep
+from repro.core.remote import RpcServer
+
+_SWEEP_LOCK = threading.Lock()
+
+
+class SweepWorker:
+    """Wrap an RpcServer with the sweep handler.  `addr` is bound
+    immediately (port 0 picks an ephemeral port), so tests and parent
+    processes can read it before serving starts."""
+
+    def __init__(self, *, host: str = "127.0.0.1", port: int = 0,
+                 workers: int = 1):
+        self.workers = max(1, int(workers))
+        self.n_requests = 0
+        self.n_shards = 0
+        self.server = RpcServer(
+            {"sweep": self._sweep, "stats": self._stats},
+            host=host, port=port)
+        self.addr = self.server.addr
+
+    def _stats(self):
+        return {"requests": self.n_requests, "shards": self.n_shards,
+                "workers": self.workers}
+
+    def _sweep(self, payload: bytes) -> bytes:
+        spec, knobs, plan, shards = pickle.loads(payload)
+        with _SWEEP_LOCK:
+            self.n_requests += 1
+            self.n_shards += len(shards)
+            payloads = [pickle.dumps((spec, knobs, plan, s),
+                                     protocol=pickle.HIGHEST_PROTOCOL)
+                        for s in shards]
+            if self.workers > 1 and len(shards) > 1 \
+                    and sweep._start_method() is not None:
+                pool = sweep._get_pool(min(self.workers, len(shards)))
+                outs = pool.map(sweep._pool_task, payloads)
+            else:
+                outs = [sweep._pool_task(p) for p in payloads]
+        return pickle.dumps(outs, protocol=pickle.HIGHEST_PROTOCOL)
+
+    def serve_forever(self):
+        self.server.serve_forever()
+
+    def start_in_thread(self):
+        return self.server.start_in_thread()
+
+    def shutdown(self):
+        self.server.shutdown()
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+    p = argparse.ArgumentParser(
+        description="Mist sweep executor daemon (docs/distributed-sweep.md)")
+    p.add_argument("--host", default="127.0.0.1",
+                   help="interface to bind (default: loopback; bind "
+                        "non-loopback interfaces on trusted networks only)")
+    p.add_argument("--port", type=int, default=0,
+                   help="TCP port (0 = ephemeral, printed on stdout)")
+    p.add_argument("--workers", type=int, default=1,
+                   help="local fork-pool size for received shards")
+    args = p.parse_args(argv)
+    w = SweepWorker(host=args.host, port=args.port, workers=args.workers)
+    # parseable by parent processes that spawned us with --port 0
+    print(f"tune-worker listening on {w.addr}", flush=True)
+    try:
+        w.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    return 0

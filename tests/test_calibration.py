@@ -1,5 +1,6 @@
 """Calibration subsystem (docs/calibration.md): profile round-trip, the
 frozen-default guarantee, attribution, and the exact-scaling fit."""
+import dataclasses
 import pickle
 
 import numpy as np
@@ -55,6 +56,42 @@ class TestProfile:
         for k in ("t_step", "t_stable", "d_delta", "mem_peak"):
             np.testing.assert_array_equal(ra[k], rb[k])
         assert b.jax_auto_threshold == a.jax_auto_threshold
+
+    def test_with_cost_merges_over_existing_overrides(self):
+        """tools/calibrate_reserved.py folds runtime_reserved into a
+        profile tools/calibrate.py already fitted: other overrides are
+        preserved, the new one lands, nothing else changes."""
+        base = CalibrationProfile.make(platform="cpu",
+                                       cost={"mxu_eff_peak": 0.41})
+        merged = base.with_cost(runtime_reserved=2.0 * 2**30)
+        assert dict(merged.cost) == {"mxu_eff_peak": 0.41,
+                                     "runtime_reserved": 2.0 * 2**30}
+        cp = merged.cost_params(CostParams())
+        assert cp.runtime_reserved == 2.0 * 2**30
+        assert cp.mxu_eff_peak == 0.41
+        # updating an existing override replaces, not duplicates
+        again = merged.with_cost(runtime_reserved=1.0 * 2**30)
+        assert dict(again.cost)["runtime_reserved"] == 1.0 * 2**30
+
+    def test_with_cost_rejects_unknown_field(self):
+        with pytest.raises(ValueError, match="unknown CostParams"):
+            DEFAULT_PROFILE.with_cost(runtime_reservd=1.0)
+
+    def test_reserved_override_frozen_default_bitwise_guard(self):
+        """The runtime_reserved fold keeps the frozen-default guarantee:
+        a no-override profile returns the base CostParams ITSELF, and an
+        override touches runtime_reserved alone — every other field stays
+        bit-identical."""
+        base = CostParams()
+        assert DEFAULT_PROFILE.with_cost().cost_params(base) is base
+        cp = DEFAULT_PROFILE.with_cost(
+            runtime_reserved=base.runtime_reserved + 64 * 2**20
+        ).cost_params(base)
+        assert cp.runtime_reserved == base.runtime_reserved + 64 * 2**20
+        for f in dataclasses.fields(CostParams):
+            if f.name in ("runtime_reserved",):
+                continue
+            assert getattr(cp, f.name) == getattr(base, f.name), f.name
 
     def test_round_trip(self):
         p = CalibrationProfile.make(

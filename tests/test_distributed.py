@@ -1,0 +1,407 @@
+"""Distributed sweep fan-out + persistent memo store guarantees
+(docs/distributed-sweep.md): the RPC transport, byte-identical plans
+across serial / local-pool / multi-host execution, graceful degradation
+on unreachable hosts, and the content-addressed memo store's round-trip
+and invalidation semantics."""
+import dataclasses
+import pickle
+import socket
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # property tests skip; example tests still run
+    HAVE_HYPOTHESIS = False
+
+from repro.calibration.profile import CalibrationProfile
+from repro.configs.base import ShapeConfig, get_arch
+from repro.core import memo_store, remote
+from repro.core.memo_store import (MemoStore, report_key, tuner_fingerprint,
+                                   unit_key)
+from repro.core.remote import (RemoteError, RpcServer, host_assignments,
+                               parse_addr, recv_frame, request, send_frame)
+from repro.core.sweep import _shard_units, _sweep_units, plan_units, \
+    prefetch_frontiers
+from repro.core.tuner import MistTuner, TuneSpec, _space_knobs, tune
+from repro.service.tune_service import TuneService, tune_remote
+from repro.service.worker import SweepWorker
+
+ARCH = "granite-3-8b"
+SHAPE = ShapeConfig("t", 4096, 32, "train")
+SMALL = dict(stage_counts=(1, 2), grad_accums=(2, 4))
+TINY = dict(stage_counts=(1, 2), grad_accums=(2,), layer_window=1)
+
+
+def _spec(space="mist", small=SMALL, **kw):
+    cfg = get_arch(ARCH)
+    return TuneSpec(arch=cfg, seq_len=SHAPE.seq_len,
+                    global_batch=SHAPE.global_batch, n_devices=16,
+                    space=space, **{**small, **kw})
+
+
+def _report_key(rep):
+    return (rep.objective, rep.plan, rep.best_S, rep.best_G,
+            tuple(rep.per_sg), rep.n_milp)
+
+
+def _memo_snapshot(tuner):
+    return {k: [(p.t, p.d, p.mem, p.cand) for p in r.frontier]
+            for k, r in tuner._frontier_memo.items()}
+
+
+@pytest.fixture
+def fast_fail(monkeypatch):
+    """Unreachable hosts fail in milliseconds instead of the production
+    connect timeout."""
+    monkeypatch.setattr(remote, "CONNECT_TIMEOUT", 0.2)
+    monkeypatch.setattr(remote, "RETRIES", 0)
+    monkeypatch.setattr(remote, "RETRY_BACKOFF_S", 0.0)
+
+
+@pytest.fixture
+def workers():
+    """Two in-thread sweep daemons, torn down after the test."""
+    ws = [SweepWorker() for _ in range(2)]
+    for w in ws:
+        w.start_in_thread()
+    yield ws
+    for w in ws:
+        w.shutdown()
+
+
+# -- transport ----------------------------------------------------------------
+
+
+class TestTransport:
+    def test_frame_round_trip(self):
+        a, b = socket.socketpair()
+        try:
+            payload = ("sweep", b"x" * 100_000, {"k": (1, 2.5)})
+            send_frame(a, payload)
+            assert recv_frame(b) == payload
+        finally:
+            a.close()
+            b.close()
+
+    def test_frame_rejects_bad_magic(self):
+        a, b = socket.socketpair()
+        try:
+            a.sendall(b"BAD!" + (8).to_bytes(8, "big"))
+            with pytest.raises(ConnectionError, match="magic"):
+                recv_frame(b)
+        finally:
+            a.close()
+            b.close()
+
+    def test_parse_addr(self):
+        assert parse_addr("10.0.0.1:7421") == ("10.0.0.1", 7421)
+        assert parse_addr(":7421") == ("127.0.0.1", 7421)
+        with pytest.raises(ValueError):
+            parse_addr("nohost")
+
+    def test_request_round_trip_and_error_propagation(self):
+        def boom():
+            raise ValueError("sentinel-message")
+        srv = RpcServer({"echo": lambda x: x, "boom": boom})
+        srv.start_in_thread()
+        try:
+            assert request(srv.addr, "echo", {"a": (1, 2)}) == {"a": (1, 2)}
+            assert request(srv.addr, "ping")["pid"]
+            # handler exceptions arrive as RemoteError carrying the remote
+            # traceback, and are NOT retried (the handler did run)
+            with pytest.raises(RemoteError, match="sentinel-message"):
+                request(srv.addr, "boom")
+            with pytest.raises(RemoteError, match="unknown op"):
+                request(srv.addr, "nope")
+        finally:
+            srv.shutdown()
+
+    def test_shutdown_op_stops_server(self, fast_fail):
+        srv = RpcServer({})
+        t = srv.start_in_thread()
+        assert request(srv.addr, "shutdown") == "bye"
+        t.join(timeout=5)
+        assert not t.is_alive()
+        srv.server.server_close()
+
+    def test_unreachable_host_raises_connection_error(self, fast_fail):
+        with pytest.raises(ConnectionError):
+            request("127.0.0.1:1", "ping")
+
+    def test_host_assignments_round_robin(self):
+        assert host_assignments(5, ["a", "b"]) == [("a", [0, 2, 4]),
+                                                   ("b", [1, 3])]
+        assert host_assignments(1, ["a", "b"]) == [("a", [0])]
+        assert host_assignments(0, ["a"]) == []
+
+
+# -- multi-host fan-out: byte-identical plans ---------------------------------
+
+
+class TestFanout:
+    @pytest.mark.parametrize("space", ["megatron", "zero", "mist",
+                                       "uniform"])
+    def test_hosts_plan_identical_to_serial(self, workers, space):
+        cfg = get_arch(ARCH)
+        ser = tune(cfg, SHAPE, 16, space=space, workers=0, **SMALL)
+        hosts = tuple(w.addr for w in workers)
+        for n_workers in (1, 2):
+            rep = tune(cfg, SHAPE, 16, space=space, workers=n_workers,
+                       hosts=hosts, **SMALL)
+            assert _report_key(rep) == _report_key(ser)
+            assert rep.hosts_used == 2
+            assert rep.n_host_failures == 0
+
+    def test_hosts_memo_identical_to_local(self, workers):
+        knobs = _space_knobs("mist", get_arch(ARCH).num_layers)
+        t1 = MistTuner(_spec())
+        prefetch_frontiers(t1, t1._cells(), knobs, workers=1)
+        th = MistTuner(_spec(hosts=tuple(w.addr for w in workers)))
+        stats = prefetch_frontiers(th, th._cells(), knobs, workers=2,
+                                   hosts=th.spec.hosts)
+        assert stats.hosts_used == 2
+        assert _memo_snapshot(t1) == _memo_snapshot(th)
+
+    def test_dead_host_degrades_to_local(self, workers, fast_fail):
+        """One live + one dead host: the dead host's shards re-run
+        locally and the plan is still byte-identical."""
+        cfg = get_arch(ARCH)
+        ser = tune(cfg, SHAPE, 16, space="mist", workers=0, **SMALL)
+        with pytest.warns(RuntimeWarning, match="fall back"):
+            rep = tune(cfg, SHAPE, 16, space="mist", workers=1,
+                       hosts=("127.0.0.1:1", workers[0].addr), **SMALL)
+        assert _report_key(rep) == _report_key(ser)
+        assert rep.hosts_used == 1
+        assert rep.n_host_failures >= 1
+
+    def test_all_hosts_dead_degrades_to_local(self, fast_fail):
+        cfg = get_arch(ARCH)
+        ser = tune(cfg, SHAPE, 16, space="mist", workers=0, **SMALL)
+        with pytest.warns(RuntimeWarning):
+            rep = tune(cfg, SHAPE, 16, space="mist", workers=1,
+                       hosts=("127.0.0.1:1", "127.0.0.1:2"), **SMALL)
+        assert _report_key(rep) == _report_key(ser)
+        assert rep.hosts_used == 0
+
+    def test_worker_daemon_serves_pool_task_payloads(self, workers):
+        """The daemon's sweep op is the same `_pool_task` body: shipping
+        it a shard returns the bitwise-identical memo shard a local
+        execution computes."""
+        spec = _spec(small=TINY)
+        tuner = MistTuner(spec)
+        knobs = _space_knobs("mist", spec.arch.num_layers)
+        plan = plan_units(tuner, tuner._cells(), knobs)
+        shards = _shard_units(plan, 2)
+        payload = pickle.dumps((spec, knobs, plan,
+                                [list(s) for s in shards]))
+        outs = pickle.loads(request(workers[0].addr, "sweep", payload))
+        assert len(outs) == len(shards)
+        for shard_idxs, (shard, n_swept, _h, _m) in zip(shards, outs):
+            local_shard, local_n = _sweep_units(tuner, plan, knobs,
+                                                shard_idxs)
+            assert n_swept == local_n
+            assert {k: [(p.t, p.d, p.mem, p.cand) for p in r.frontier]
+                    for k, r in shard} \
+                == {k: [(p.t, p.d, p.mem, p.cand) for p in r.frontier]
+                    for k, r in local_shard}
+
+
+# -- partition property: any sharding merges to the same memo -----------------
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(st.data())
+    def test_any_partition_merges_bitwise_identical(data):
+        """Hypothesis: ANY partition of the unit plan across ANY number of
+        shards (hosts x workers), each executed by an independent tuner
+        (= a different process/host), merges to a bitwise-identical
+        frontier memo."""
+        spec = _spec(small=TINY)
+        knobs = _space_knobs("mist", spec.arch.num_layers)
+        ref = MistTuner(spec)
+        cells = ref._cells()
+        plan = plan_units(ref, cells, knobs)
+        _sweep_and_merge(ref, plan, knobs, [list(range(len(plan)))])
+        n_shards = data.draw(st.integers(1, max(1, len(plan))),
+                             label="n_shards")
+        assign = data.draw(
+            st.lists(st.integers(0, n_shards - 1), min_size=len(plan),
+                     max_size=len(plan)), label="assignment")
+        shards = [[i for i, a in enumerate(assign) if a == s]
+                  for s in range(n_shards)]
+        merged = MistTuner(spec)
+        for shard_idxs in shards:
+            if not shard_idxs:
+                continue
+            # fresh tuner per shard = a different host's executor
+            worker_tuner = MistTuner(spec)
+            shard, _n = _sweep_units(worker_tuner, plan, knobs, shard_idxs)
+            merged._frontier_memo.update(shard)
+        assert _memo_snapshot(merged) == _memo_snapshot(ref)
+
+    def _sweep_and_merge(tuner, plan, knobs, shards):
+        for shard_idxs in shards:
+            shard, _n = _sweep_units(tuner, plan, knobs, shard_idxs)
+            tuner._frontier_memo.update(shard)
+
+
+# -- memo store ---------------------------------------------------------------
+
+
+class TestMemoStore:
+    def test_unit_round_trip_warms_plan(self, tmp_path):
+        """A second tuner preloading from the store has nothing left to
+        sweep: plan_units drops every warm unit."""
+        d = str(tmp_path / "memo")
+        r1 = MistTuner(_spec(memo_dir=d)).tune()
+        assert not r1.from_memo and r1.n_swept > 0
+        t2 = MistTuner(_spec(memo_dir=d, workers=1))
+        knobs = _space_knobs("mist", t2.spec.arch.num_layers)
+        store = MemoStore(d)
+        n = store.preload(t2, t2._cells(), knobs)
+        assert n > 0 and store.unit_misses == 0
+        assert len(plan_units(t2, t2._cells(), knobs)) == 0
+
+    def test_report_cache_round_trip(self, tmp_path):
+        d = str(tmp_path / "memo")
+        r1 = MistTuner(_spec(memo_dir=d)).tune()
+        r2 = MistTuner(_spec(memo_dir=d)).tune()
+        assert r2.from_memo and not r1.from_memo
+        assert _report_key(r2) == _report_key(r1)
+
+    def test_report_cache_ignores_execution_routing(self, tmp_path):
+        """A report computed under one (engine, backend, workers, hosts)
+        setting serves every other — those fields never change the
+        answer, so the key excludes them."""
+        d = str(tmp_path / "memo")
+        r1 = MistTuner(_spec(memo_dir=d, workers=4)).tune()
+        r2 = MistTuner(_spec(memo_dir=d, workers=0, backend="auto")).tune()
+        assert r2.from_memo
+        assert _report_key(r2) == _report_key(r1)
+
+    def test_subset_query_served_from_unit_store(self, tmp_path):
+        """A DIFFERENT query (fewer grad-accums → different report key)
+        whose stage hypotheses are a subset of a previous sweep's runs
+        without sweeping anything: the frontier memo is a cross-job
+        cache, not just a same-query one."""
+        d = str(tmp_path / "memo")
+        MistTuner(_spec(memo_dir=d)).tune()
+        rep = MistTuner(_spec(memo_dir=d,
+                              small=dict(stage_counts=(1, 2),
+                                         grad_accums=(2,)))).tune()
+        assert not rep.from_memo          # different query...
+        assert rep.n_swept == 0           # ...but zero cold sweeps
+        assert rep.n_store_hits > 0
+
+    def test_key_invalidation_on_profile_change(self, tmp_path):
+        """A calibration-profile cost override must move every address:
+        stale frontiers fitted under other constants are never served."""
+        t1 = MistTuner(_spec())
+        prof = CalibrationProfile.make(platform="cpu",
+                                       cost={"runtime_reserved": 2.0**30})
+        t2 = MistTuner(_spec(profile=prof))
+        knobs = _space_knobs("mist", t1.spec.arch.num_layers)
+        mk = dict(layers=20, n_dev=8, G=2, role=(True, True), inflight=1.0,
+                  knobs=knobs)
+        k1 = unit_key(tuner_fingerprint(t1), t1._memo_key(**mk))
+        k2 = unit_key(tuner_fingerprint(t2), t2._memo_key(**mk))
+        assert k1 != k2
+        assert report_key(t1) != report_key(t2)
+
+    def test_key_invalidation_on_knob_and_kernel_grid(self):
+        t = MistTuner(_spec())
+        fp = tuner_fingerprint(t)
+        base_knobs = _space_knobs("mist", t.spec.arch.num_layers)
+        zero_knobs = _space_knobs("zero", t.spec.arch.num_layers)
+        mk = dict(layers=20, n_dev=8, G=2, role=(True, True), inflight=1.0)
+        k_mist = unit_key(fp, t._memo_key(**mk, knobs=base_knobs))
+        k_zero = unit_key(fp, t._memo_key(**mk, knobs=zero_knobs))
+        assert k_mist != k_zero
+        tg = MistTuner(_spec(kernel_grid=((512, 512, 256, 256),
+                                          (256, 512, 256, 256))))
+        k_grid = unit_key(tuner_fingerprint(tg),
+                          tg._memo_key(**mk, knobs=base_knobs))
+        assert k_grid != k_mist
+
+    def test_key_invalidation_on_workload_change(self):
+        t1 = MistTuner(_spec())
+        t2 = MistTuner(dataclasses.replace(_spec(), seq_len=2048))
+        assert report_key(t1) != report_key(t2)
+        assert tuner_fingerprint(t1) != tuner_fingerprint(t2)
+
+    def test_corrupt_entry_treated_cold(self, tmp_path):
+        d = str(tmp_path / "memo")
+        MistTuner(_spec(memo_dir=d)).tune()
+        store = MemoStore(d)
+        n_poisoned = 0
+        for kind in ("units", "reports"):
+            base = tmp_path / "memo" / kind
+            for p in base.rglob("*.pkl"):
+                p.write_bytes(b"not a pickle")
+                n_poisoned += 1
+        assert n_poisoned > 0
+        rep = MistTuner(_spec(memo_dir=d)).tune()      # recomputes cleanly
+        assert not rep.from_memo
+        ser = MistTuner(_spec()).tune()
+        assert _report_key(rep) == _report_key(ser)
+
+    def test_atomic_write_layout(self, tmp_path):
+        """Entries land under <kind>/<hh>/<hash>.pkl with no temp-file
+        litter left behind."""
+        d = str(tmp_path / "memo")
+        MistTuner(_spec(memo_dir=d)).tune()
+        files = list((tmp_path / "memo").rglob("*"))
+        assert any(f.suffix == ".pkl" for f in files)
+        assert not [f for f in files if f.suffix == ".tmp"]
+        for f in files:
+            if f.suffix == ".pkl":
+                assert f.parent.name == f.stem[:2]
+
+    def test_canonical_hash_stability(self):
+        """Digest is structural, not pickle-bytes: equal values hash
+        equal, tuples/lists distinguish from their elements, floats are
+        bit-exact."""
+        assert memo_store.digest({"a": (1, 2.5)}) \
+            == memo_store.digest({"a": (1, 2.5)})
+        assert memo_store.digest(0.1 + 0.2) != memo_store.digest(0.3)
+        assert memo_store.digest((1,)) != memo_store.digest(1)
+
+
+# -- persistent tune service --------------------------------------------------
+
+
+class TestTuneService:
+    def test_service_round_trip_and_warm_hit(self, tmp_path):
+        svc = TuneService(str(tmp_path / "memo"))
+        svc.start_in_thread()
+        try:
+            spec = _spec()
+            ser = MistTuner(spec).tune()
+            r1 = tune_remote(spec, svc.addr)
+            assert _report_key(r1) == _report_key(ser)
+            assert not r1.from_memo
+            r2 = tune_remote(spec, svc.addr)
+            assert r2.from_memo
+            assert _report_key(r2) == _report_key(ser)
+            stats = request(svc.addr, "stats")
+            assert stats["queries"] == 2 and stats["report_hits"] == 1
+        finally:
+            svc.shutdown()
+
+    def test_service_overrides_client_routing(self, tmp_path):
+        """The service applies its own memo/worker policy: a client spec
+        pointing at a bogus memo_dir or dead hosts is re-routed."""
+        svc = TuneService(str(tmp_path / "memo"))
+        svc.start_in_thread()
+        try:
+            spec = _spec(memo_dir="/nonexistent/elsewhere",
+                         hosts=("127.0.0.1:1",))
+            rep = tune_remote(spec, svc.addr)
+            ser = MistTuner(_spec()).tune()
+            assert _report_key(rep) == _report_key(ser)
+            assert rep.n_host_failures == 0    # dead client hosts ignored
+        finally:
+            svc.shutdown()

@@ -31,15 +31,25 @@ bound sanity check, not a refit; re-run on a real accelerator host to
 refit the default.  Run with ``--json`` to archive the evidence next to
 the benchmark artifacts.
 
+With ``--write-profile PATH|auto`` the suggestion is folded into the
+platform's ``CalibrationProfile`` as a sparse ``runtime_reserved`` cost
+override (merged over any constants ``tools/calibrate.py`` already
+fitted — the two tools share one profile file).  ``auto`` resolves to
+the platform's default cache location, which ``TuneSpec.profile=
+load_profile()`` / ``StageCostModel(profile=...)`` pick up on the next
+run.  On CPU-sourced measurements the write is refused unless
+``--force`` is given, for the f32-legalization reason above.
+
 Usage:
     PYTHONPATH=src python tools/calibrate_reserved.py [--arch granite-3-8b]
-        [--full] [--json PATH]
+        [--full] [--json PATH] [--write-profile PATH|auto]
 """
 from __future__ import annotations
 
 import argparse
 import json
 import math
+import os
 import sys
 from typing import Any, Dict, List
 
@@ -145,6 +155,13 @@ def main(argv=None) -> int:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--json", metavar="PATH")
+    ap.add_argument("--write-profile", metavar="PATH|auto", default=None,
+                    help="fold the suggested runtime_reserved into the "
+                         "platform CalibrationProfile (auto = default "
+                         "cache location)")
+    ap.add_argument("--force", action="store_true",
+                    help="write the profile even from a CPU-only "
+                         "measurement (upper bound, not a refit)")
     args = ap.parse_args(argv)
 
     cells = []
@@ -176,6 +193,30 @@ def main(argv=None) -> int:
                        "suggested_reserved_bytes": sug,
                        "accelerator_measurement": on_accel}, f, indent=2)
         print(f"wrote {args.json}")
+
+    if args.write_profile:
+        if not on_accel and not args.force:
+            print("refusing --write-profile from a CPU-only measurement "
+                  "(memory_analysis over-counts under f32 legalization); "
+                  "re-run on an accelerator host or pass --force",
+                  file=sys.stderr)
+            return 1
+        from repro.calibration.profile import (default_platform,
+                                               load_profile, profile_path)
+        platform = default_platform()
+        path = (profile_path(platform) if args.write_profile == "auto"
+                else args.write_profile)
+        # merge over whatever tools/calibrate.py already fitted for this
+        # platform; an absent file starts from the frozen defaults
+        base = load_profile(platform=platform,
+                            path=path if os.path.exists(str(path)) else None)
+        prof = base.with_cost(runtime_reserved=sug)
+        if prof.platform == "default":
+            import dataclasses
+            prof = dataclasses.replace(prof, platform=platform,
+                                       source="calibrate_reserved")
+        prof.save(path)
+        print(f"wrote runtime_reserved={sug / 2**20:.0f} MiB into {path}")
     return 0
 
 

@@ -1,0 +1,17 @@
+#!/usr/bin/env python
+"""Run the persistent tuning service (docs/distributed-sweep.md).
+
+    PYTHONPATH=src python tools/tune_service.py \
+        --memo-dir ~/.cache/repro/memo --workers 8
+
+Clients call `repro.service.tune_remote(spec, "host:port")`; warm
+queries answer from the on-disk report cache in milliseconds, cold
+queries sweep (optionally fanning out to `tools/tune_worker.py` hosts
+via --hosts) and persist their frontiers for future queries.
+"""
+import sys
+
+from repro.service.tune_service import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,15 @@
+#!/usr/bin/env python
+"""Run a sweep executor daemon (docs/distributed-sweep.md).
+
+    PYTHONPATH=src python tools/tune_worker.py --port 7421 --workers 8
+
+Point a tuner at it with `TuneSpec(hosts=("thathost:7421",))` (or
+`tune(..., hosts=...)`); shards of the hypothesis sweep are shipped
+over and the merged plan stays byte-identical to a serial tune.
+"""
+import sys
+
+from repro.service.worker import main
+
+if __name__ == "__main__":
+    sys.exit(main())
