@@ -75,6 +75,13 @@ class CostParams:
     # the big-matmul peak)
     serve_decode_transient: float = 0.3 * 2**30
     decode_mxu_eff: float = 0.30
+    # paged-KV serving (docs/continuous-batching.md): expected request
+    # fill fraction of the decode horizon under a mixed-length trace
+    # (drives the occupancy-aware page-size objective) and the strided
+    # page-gather penalty in rows (smaller pages touch more, shorter,
+    # HBM bursts)
+    serve_page_fill: float = 0.5
+    serve_page_stride_rows: float = 4.0
     # per-kernel roofline coefficients (the kernel-config plan dimension);
     # calibratable from kernels.autotune bench measurements
     kernels: KernelCoeffs = KernelCoeffs()
@@ -894,15 +901,18 @@ class ServeCostModel:
     SYMS = ("dp", "tp", "z1", "z2", "z3", "kv8")
 
     def __init__(self, cfg: ArchConfig, *, batch: int, max_len: int,
-                 hw: HardwareSpec = V5E, cp: CostParams = CostParams()):
+                 page_size: int = 0, hw: HardwareSpec = V5E,
+                 cp: CostParams = CostParams()):
         from repro.core.costmodel_params import (param_count,
                                                  serve_time_terms)
         from repro.lowering.cache_layout import (prefill_transient_bytes,
                                                  serve_device_bytes,
-                                                 symbolic_cache_bytes)
+                                                 symbolic_cache_bytes,
+                                                 symbolic_paged_cache_bytes)
         from repro.lowering.state_layout import SYMBOLIC_OPS
         self.cfg, self.hw, self.cp = cfg, hw, cp
         self.batch, self.max_len = int(batch), int(max_len)
+        self.page_size = int(page_size)
         st = arch_stats(cfg)
         self.st = st
         dp, tp, kv8 = Sym("dp"), Sym("tp"), Sym("kv8")
@@ -912,10 +922,18 @@ class ServeCostModel:
         # so wo = oo = 0 and L = num_layers)
         weight = symbolic_state_terms(cfg, has_embed=True,
                                       has_head=True)["weight"]
-        # caches: the shared cache layout, one derivation per dtype,
-        # blended by the exact-0/1 kv8 indicator
-        c16 = symbolic_cache_bytes(cfg, self.batch, self.max_len, "bf16")
-        c8 = symbolic_cache_bytes(cfg, self.batch, self.max_len, "int8")
+        # caches: the shared cache layout (page pools when page_size > 0),
+        # one derivation per dtype, blended by the exact-0/1 kv8 indicator.
+        # page_size == 0 builds exactly the contiguous exprs, so existing
+        # serve plans and golden fixtures are untouched.
+        if self.page_size:
+            c16 = symbolic_paged_cache_bytes(cfg, self.batch, self.max_len,
+                                             self.page_size, "bf16")
+            c8 = symbolic_paged_cache_bytes(cfg, self.batch, self.max_len,
+                                            self.page_size, "int8")
+        else:
+            c16 = symbolic_cache_bytes(cfg, self.batch, self.max_len, "bf16")
+            c8 = symbolic_cache_bytes(cfg, self.batch, self.max_len, "int8")
         cache = where(kv8, c8, c16)
         mem_decode = serve_device_bytes(
             weight=weight, cache=cache,
@@ -927,12 +945,26 @@ class ServeCostModel:
                 st.act_coef_full, float(st.d_model), float(self.batch),
                 float(self.max_len), dp, tp),
             reserved=cp.runtime_reserved)
+        # occupancy-aware decode stream (docs/continuous-batching.md):
+        # with paging only LIVE pages stream per step — the expected fill
+        # fraction rounded up to page granularity (internal fragmentation)
+        # — but each page is a separate, shorter HBM burst (strided-read
+        # penalty).  Memory exprs stay the exact pool bytes; only the
+        # t_decode stream is scaled, by a concrete python float.
+        if self.page_size:
+            ps = float(self.page_size)
+            live_frac = (math.ceil(cp.serve_page_fill * self.max_len / ps)
+                         * ps / float(self.max_len))
+            stream_cache = cache * (
+                live_frac * (1.0 + cp.serve_page_stride_rows / ps))
+        else:
+            stream_cache = cache
         times = serve_time_terms(
             batch=float(self.batch), seq_len=float(self.max_len),
             dp=dp, tp=tp, z3=Sym("z3"),
             n_active=float(param_count(cfg, active_only=True)),
             n_layers=cfg.num_layers, d_model=st.d_model,
-            attn_flops_coef=st.attn_flops_coef, cache_bytes=cache,
+            attn_flops_coef=st.attn_flops_coef, cache_bytes=stream_cache,
             hbm_bw=hw.hbm_bw, peak_flops=hw.peak_flops_bf16,
             ici_bw=hw.ici_bw_total * cp.ici_eff,
             mxu_eff_peak=cp.mxu_eff_peak, mxu_eff_floor=cp.mxu_eff_floor,
@@ -980,7 +1012,9 @@ def estimate_serve_plan(cfg: ArchConfig, shape: ShapeConfig, plan, *,
                          f"{len(plan.stages)} stages")
     st0 = plan.stages[0]
     scm = ServeCostModel(cfg, batch=shape.global_batch,
-                         max_len=shape.seq_len, hw=hw, cp=cp)
+                         max_len=shape.seq_len,
+                         page_size=getattr(plan, "page_size", 0),
+                         hw=hw, cp=cp)
     r = scm.evaluate_one(dp=st0.dp, tp=st0.tp, zero=st0.zero,
                          kv_cache_dtype=plan.kv_cache_dtype)
     r["fits"] = max(r["mem_decode"], r["mem_prefill"]) \

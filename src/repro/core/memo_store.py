@@ -146,7 +146,15 @@ class MemoStore:
         path = self._path(kind, key)
         try:
             with open(path, "rb") as f:
-                return pickle.load(f)
+                value = pickle.load(f)
+            # refresh the entry's timestamp on every hit so gc() evicts
+            # by last ACCESS, not write order (atime is unreliable under
+            # noatime mounts; mtime is ours to repurpose)
+            try:
+                os.utime(path)
+            except OSError:
+                pass
+            return value
         except FileNotFoundError:
             return None
         except Exception:
@@ -179,6 +187,45 @@ class MemoStore:
         for dirpath, _dirs, files in os.walk(base):
             n += sum(f.endswith(".pkl") for f in files)
         return n
+
+    def gc(self, max_bytes: int) -> Dict[str, int]:
+        """Prune the store down to ``max_bytes``, oldest-ACCESS entries
+        first (``_get`` refreshes an entry's timestamp on every hit).
+
+        Each eviction is one atomic ``unlink``: a reader racing a gc sees
+        either the whole entry or a miss, never a partial file.  Entries
+        that vanish mid-scan (another gc, a writer's ``os.replace``) are
+        skipped.  Returns {scanned, removed, bytes_before, bytes_after}.
+        """
+        if max_bytes < 0:
+            raise ValueError("max_bytes must be >= 0")
+        entries = []          # (mtime, size, path)
+        for kind in ("units", "reports"):
+            base = os.path.join(self.root, kind)
+            for dirpath, _dirs, files in os.walk(base):
+                for f in files:
+                    if not f.endswith(".pkl"):
+                        continue
+                    path = os.path.join(dirpath, f)
+                    try:
+                        st = os.stat(path)
+                    except OSError:
+                        continue
+                    entries.append((st.st_mtime, st.st_size, path))
+        total = sum(e[1] for e in entries)
+        stats = {"scanned": len(entries), "removed": 0,
+                 "bytes_before": total, "bytes_after": total}
+        entries.sort()
+        for _mtime, size, path in entries:
+            if stats["bytes_after"] <= max_bytes:
+                break
+            try:
+                os.unlink(path)
+            except OSError:
+                continue               # already gone: someone else's gc
+            stats["removed"] += 1
+            stats["bytes_after"] -= size
+        return stats
 
     # -- frontier-memo units -------------------------------------------------
     def preload(self, tuner, cells, knobs) -> int:

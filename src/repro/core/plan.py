@@ -67,6 +67,7 @@ class Plan:
     grad_compression: bool = False  # int8 + error feedback on DP reduce
     kv_cache_dtype: str = "bf16"    # bf16 | int8 (serving; dynamic scales)
     kernel: KernelConfig = DEFAULT_KERNEL_CONFIG  # tile/block choices
+    page_size: int = 0  # paged-KV page size in tokens; 0 = contiguous cache
 
     @property
     def num_stages(self) -> int:
@@ -104,6 +105,10 @@ class Plan:
         # pre-kernel-tuning plans (golden fixtures stay stable)
         if self.kernel != DEFAULT_KERNEL_CONFIG:
             doc["kernel"] = dataclasses.asdict(self.kernel)
+        # same omission rule: page_size = 0 (contiguous) serializes
+        # byte-identically to pre-paging plans
+        if self.page_size:
+            doc["page_size"] = self.page_size
         doc["stages"] = [dataclasses.asdict(s) for s in self.stages]
         return json.dumps(doc, indent=2)
 

@@ -83,25 +83,41 @@ def _sweep_kv(scm, cands: List[Tuple[int, int, int]], kv: str,
 
 
 def serve_plan_from(cand: Candidate, num_layers: int,
-                    kv_cache_dtype: str) -> Plan:
+                    kv_cache_dtype: str, page_size: int = 0) -> Plan:
     """Materialize the selected candidate: no remat, no offload, no
     accumulation — a pure serving plan ``lower_plan`` threads into
     ``make_prefill_step``/``make_serve_step`` unchanged."""
     return single_stage_plan(
         num_layers, dp=cand.dp, tp=cand.tp, micro_batch=cand.b,
         grad_accum=1, zero=cand.zero, ckpt_layers=0,
-        remat_policy="none", kv_cache_dtype=kv_cache_dtype)
+        remat_policy="none", kv_cache_dtype=kv_cache_dtype,
+        page_size=page_size)
 
 
-def tune_serve(tuner: "MistTuner") -> "TuneReport":
-    """`MistTuner.tune()` body for ``space == "serve"``."""
+def serve_page_grid(spec) -> Tuple[int, ...]:
+    """Page sizes to sweep: ``spec.page_grid`` validated against the
+    decode horizon, or ``(0,)`` (contiguous only — the pre-paging
+    tuner, byte-identical plans)."""
+    if spec.page_grid is None:
+        return (0,)
+    grid = tuple(int(ps) for ps in spec.page_grid)
+    for ps in grid:
+        if ps < 0 or (ps and spec.seq_len % ps):
+            raise ValueError(
+                f"page_grid entry {ps} must be 0 or divide "
+                f"seq_len {spec.seq_len}")
+    return grid
+
+
+def _tune_one_page_size(tuner, page_size: int):
+    """Sweep kv dtypes x (dp, tp, zero) and run the G MILP for ONE page
+    size.  Returns (best, per_sg, n_points, n_milp) where best is
+    (objective, G, sol, kv) or None."""
     from repro.core.costmodel import ServeCostModel
-    from repro.core.tuner import TuneReport
-    t0 = time.time()
-    spec, hw, cp = tuner.spec, tuner.hw, tuner.cp
-    cfg = spec.arch
+    spec, cfg = tuner.spec, tuner.spec.arch
     scm = ServeCostModel(cfg, batch=spec.global_batch,
-                         max_len=spec.seq_len, hw=hw, cp=cp)
+                         max_len=spec.seq_len, page_size=page_size,
+                         hw=tuner.hw, cp=tuner.cp)
     budget = scm.memory_budget()
     grid = [(dp, tp, z)
             for dp, tp in legal_dp_tp(spec.n_devices, cfg,
@@ -116,16 +132,11 @@ def tune_serve(tuner: "MistTuner") -> "TuneReport":
         if front:
             chosen_kv = kv
             break
-    dt = time.time() - t0
     if not front:
-        return TuneReport(plan=None, objective=float("inf"),
-                          throughput_samples=0.0, throughput_tokens=0.0,
-                          space=spec.space, n_points=n_points, n_milp=0,
-                          tune_seconds=dt, infeasible=True,
-                          n_swept=n_points)
+        return None, [], n_points, 0
     # decode-steps hypotheses ride the G axis, so the MILP, Eq. 1, and
     # the (S, G) report fields all read identically to training
-    best: Optional[Tuple[float, int, object]] = None
+    best = None
     per_sg: List[Tuple[int, int, float]] = []
     n_milp = 0
     cands = [[StageCand(layers=cfg.num_layers, n_devices=spec.n_devices,
@@ -138,17 +149,48 @@ def tune_serve(tuner: "MistTuner") -> "TuneReport":
             continue
         per_sg.append((1, G, sol.objective))
         if best is None or sol.objective < best[0]:
-            best = (sol.objective, G, sol)
+            best = (sol.objective, G, sol, chosen_kv)
+    return best, per_sg, n_points, n_milp
+
+
+def tune_serve(tuner: "MistTuner") -> "TuneReport":
+    """`MistTuner.tune()` body for ``space == "serve"``.
+
+    Outer loop: the paged-KV page-size grid (default ``(0,)`` —
+    contiguous only).  Each page size gets its own occupancy-aware
+    ``ServeCostModel``; the cross-page-size winner is chosen by an
+    occupancy-DISCOUNTED score — a contiguous cache is charged
+    ``objective / serve_page_fill`` because under a mixed-length trace
+    it pins the full horizon per slot while only the fill fraction does
+    work, whereas the paged objective already prices its own live
+    stream.  The score is used ONLY for comparison: the reported
+    objective stays the winner's raw Eq. 1 value, so the default grid
+    reports exactly the pre-paging numbers."""
+    from repro.core.tuner import TuneReport
+    t0 = time.time()
+    spec, cp = tuner.spec, tuner.cp
+    cfg = spec.arch
+    n_points = n_milp = 0
+    winner = None  # (score, best-tuple, per_sg, page_size)
+    for ps in serve_page_grid(spec):
+        best, per_sg, pts, milps = _tune_one_page_size(tuner, ps)
+        n_points += pts
+        n_milp += milps
+        if best is None:
+            continue
+        score = best[0] * (1.0 if ps else 1.0 / cp.serve_page_fill)
+        if winner is None or score < winner[0]:
+            winner = (score, best, per_sg, ps)
     dt = time.time() - t0
-    if best is None:                                 # pragma: no cover
+    if winner is None:
         return TuneReport(plan=None, objective=float("inf"),
                           throughput_samples=0.0, throughput_tokens=0.0,
                           space=spec.space, n_points=n_points,
                           n_milp=n_milp, tune_seconds=dt, infeasible=True,
                           n_swept=n_points)
-    obj, G, sol = best
+    _, (obj, G, sol, chosen_kv), per_sg, page_size = winner
     plan = serve_plan_from(sol.selection[0].point.cand, cfg.num_layers,
-                           chosen_kv)
+                           chosen_kv, page_size=page_size)
     return TuneReport(
         plan=plan, objective=obj,
         throughput_samples=spec.global_batch / obj,

@@ -115,6 +115,14 @@ class TuneSpec:
     # (TuneReport.from_memo).  Purely an execution accelerator: results
     # are byte-identical with or without it.
     memo_dir: Optional[str] = None
+    # Paged-KV page-size grid for the serve space (core/serve_space.py;
+    # docs/continuous-batching.md): token page sizes to sweep alongside
+    # the kv grid, each priced by its own occupancy-aware ServeCostModel.
+    # None sweeps only page_size = 0 (contiguous cache), whose exprs are
+    # byte-identical to the pre-paging serve tuner — golden serve
+    # fixtures stay stable.  Entries must divide seq_len; 0 may be
+    # included to let the contiguous layout compete.
+    page_grid: Optional[Tuple[int, ...]] = None
     # Measured calibration profile (repro.calibration; docs/calibration.md):
     # fitted per-platform CostParams / InterferenceModel overrides layered
     # over the tuner's cp.  Lives on the SPEC, not the tuner kwargs, because

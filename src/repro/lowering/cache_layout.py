@@ -54,6 +54,12 @@ class CacheLeaf:
     shape: Tuple[int, ...]
     itemsize: int
     bdim: Optional[int]            # batch dim located BY VALUE (or None)
+    # probe-established dims (batch / max_len perturbed separately under
+    # eval_shape) — what the PAGED engine classifies by.  ``bdim`` must
+    # stay by-value because it mirrors ``cache_specs``' runtime sharding;
+    # the allocator cannot tolerate that hazard, so it gets its own view.
+    pbdim: Optional[int] = None    # unique batch-varying dim (or None)
+    sdims: Tuple[int, ...] = ()    # max_len-varying dims
 
     @property
     def nd(self) -> int:
@@ -90,14 +96,27 @@ def derive_cache_layout(cfg: "ArchConfig", batch: int, max_len: int,
     cdt = jnp.int8 if kv_cache_dtype == "int8" else jnp.bfloat16
     caches = jax.eval_shape(
         lambda: model.init_caches(batch, max_len, cdt))
+    # probe trees: batch and max_len perturbed separately, so a stacked
+    # lead dim equal to the batch by value can never be mistaken for it
+    bpro = jax.tree_util.tree_leaves(jax.eval_shape(
+        lambda: model.init_caches(batch + 1, max_len, cdt)))
+    spro = jax.tree_util.tree_leaves(jax.eval_shape(
+        lambda: model.init_caches(batch, max_len + 1, cdt)))
     leaves = []
-    for path, sds in jax.tree_util.tree_leaves_with_path(caches):
+    for (path, sds), lb, ls in zip(
+            jax.tree_util.tree_leaves_with_path(caches), bpro, spro):
         k = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
         shape = tuple(int(d) for d in sds.shape)
         bdim = next((i for i, d in enumerate(shape) if d == batch), None)
+        bdims = [i for i, (a, b) in enumerate(zip(shape, lb.shape))
+                 if a != b]
+        sdims = tuple(i for i, (a, b) in enumerate(zip(shape, ls.shape))
+                      if a != b)
         leaves.append(CacheLeaf(key=k, shape=shape,
                                 itemsize=int(sds.dtype.itemsize),
-                                bdim=bdim))
+                                bdim=bdim,
+                                pbdim=bdims[0] if len(bdims) == 1 else None,
+                                sdims=sdims))
     layout = CacheLayout(arch=cfg.name, batch=int(batch),
                          max_len=int(max_len),
                          kv_cache_dtype=kv_cache_dtype,
@@ -165,6 +184,77 @@ def cache_bytes(layout: CacheLayout, *, dp, tp, ops=SYMBOLIC_OPS) -> Any:
         sh = _leaf_shards(leaf, batch, dp, tp, sb, ops)
         total = total + n * float(leaf.itemsize) / sh
     return total
+
+
+def is_paged_leaf(leaf: CacheLeaf, max_len: int) -> bool:
+    """A leaf the paged engine carves into pages: a KV-sequence leaf whose
+    sequence extent IS the decode horizon (probe-established, matching
+    ``repro.serving.pages.classify_cache_tree`` exactly).  Enc-dec cross
+    k/v (sequence extent = encoder length) and SSM/conv state stay
+    slot-resident."""
+    return (leaf.key in SEQ_CACHE_KEYS and leaf.pbdim is not None
+            and (leaf.pbdim + 1) in leaf.sdims)
+
+
+def paged_cache_bytes(layout: CacheLayout, *, page_size: int, dp, tp,
+                      ops=SYMBOLIC_OPS) -> Any:
+    """Per-device bytes of the PAGED serve cache tree — the single
+    derivation behind both the symbolic serve cost model and the concrete
+    ``memory_report`` on paged shapes (same two-evaluation contract as
+    ``cache_bytes``).
+
+    The paged engine replaces every paged leaf (lead, B, S, tail) with a
+    page pool (lead, B*npp + 1, page_size, tail) — npp = max_len //
+    page_size pages per request plus one shared trash page duplicate
+    writes land on — widens each ``pos`` leaf to a per-request vector,
+    and always allocates one shared (B, npp) int32 block table (the
+    paged step takes it even for pure-state families with no paged
+    leaves).  Pools shard exactly like their contiguous counterparts
+    (``_leaf_shards`` on the original leaf), so at dp == tp == 1 this is
+    byte-exact against the engine's replicated allocation.
+    """
+    ps = int(page_size)
+    if ps <= 0:
+        return cache_bytes(layout, dp=dp, tp=tp, ops=ops)
+    if layout.max_len % ps:
+        raise ValueError(
+            f"page_size {ps} must divide max_len {layout.max_len}")
+    npp = layout.max_len // ps
+    batch = float(layout.batch)
+    sb = ops.divisible(batch, dp) * ops.gt(dp, 1.0)
+    total = 0.0
+    for leaf in layout.leaves:
+        sh = _leaf_shards(leaf, batch, dp, tp, sb, ops)
+        if is_paged_leaf(leaf, layout.max_len):
+            lead = float(math.prod(leaf.shape[:leaf.pbdim]))
+            tail = float(math.prod(leaf.shape[leaf.pbdim + 2:]))
+            n = lead * (batch * float(npp) + 1.0) * float(ps) * tail
+        elif leaf.key == "pos":
+            n = float(math.prod(leaf.shape)) * batch  # widened to (.., B)
+        else:
+            n = float(math.prod(leaf.shape))
+        total = total + n * float(leaf.itemsize) / sh
+    return total + batch * float(npp) * 4.0  # shared int32 block table
+
+
+def symbolic_paged_cache_bytes(cfg: "ArchConfig", batch: int, max_len: int,
+                               page_size: int,
+                               kv_cache_dtype: str = "bf16") -> S.Expr:
+    """Serve-cost-model entry point for paged pools, over ``dp``/``tp``."""
+    layout = derive_cache_layout(cfg, batch, max_len, kv_cache_dtype)
+    return S.wrap(paged_cache_bytes(layout, page_size=page_size,
+                                    dp=S.Sym("dp"), tp=S.Sym("tp"),
+                                    ops=SYMBOLIC_OPS))
+
+
+def concrete_paged_cache_bytes(cfg: "ArchConfig", batch: int, max_len: int,
+                               page_size: int, kv_cache_dtype: str, *,
+                               dp_size: int, tp_size: int) -> float:
+    """Lowering entry point for paged pools (memory_report's concrete
+    evaluation of the same derivation)."""
+    layout = derive_cache_layout(cfg, batch, max_len, kv_cache_dtype)
+    return paged_cache_bytes(layout, page_size=page_size, dp=float(dp_size),
+                             tp=float(tp_size), ops=CONCRETE_OPS)
 
 
 def symbolic_cache_bytes(cfg: "ArchConfig", batch: int, max_len: int,

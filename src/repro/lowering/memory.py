@@ -276,6 +276,7 @@ def _serve_report(lowered: "LoweredPlan", stt, shape: ShapeConfig,
     derivation per term, not a private spec-table walk), plus the
     transient/reserved envelope from ``CostParams``."""
     from repro.lowering.cache_layout import (concrete_cache_bytes,
+                                             concrete_paged_cache_bytes,
                                              prefill_transient_bytes)
     st = lowered.stages[0]
     sc = st.stage
@@ -283,11 +284,22 @@ def _serve_report(lowered: "LoweredPlan", stt, shape: ShapeConfig,
     weight = stage_layout_terms(lowered, 0)["weight"]
     cache = 0.0
     if shape.kind == "decode":
-        cache = concrete_cache_bytes(
-            lowered.cfg, shape.global_batch, shape.seq_len,
-            lowered.plan.kv_cache_dtype,
-            dp_size=SH.axis_size(mesh, st.mesh_axes.dp),
-            tp_size=SH.axis_size(mesh, st.mesh_axes.tp))
+        page_size = int(getattr(lowered.plan, "page_size", 0))
+        if page_size > 0:
+            # paged serve plan: the continuous-batching engine's pool
+            # layout (page pools + trash page + widened pos + block
+            # table), same two-evaluation contract as the contiguous path
+            cache = concrete_paged_cache_bytes(
+                lowered.cfg, shape.global_batch, shape.seq_len, page_size,
+                lowered.plan.kv_cache_dtype,
+                dp_size=SH.axis_size(mesh, st.mesh_axes.dp),
+                tp_size=SH.axis_size(mesh, st.mesh_axes.tp))
+        else:
+            cache = concrete_cache_bytes(
+                lowered.cfg, shape.global_batch, shape.seq_len,
+                lowered.plan.kv_cache_dtype,
+                dp_size=SH.axis_size(mesh, st.mesh_axes.dp),
+                tp_size=SH.axis_size(mesh, st.mesh_axes.tp))
         trans = cp.serve_decode_transient
     else:   # prefill: a couple of layers' activations + logits headroom
         trans = prefill_transient_bytes(

@@ -162,8 +162,12 @@ def encdec_decode(params: Params, tokens: jax.Array, caches, cfg: ArchConfig,
     """caches: {"self": stacked self KV (+pos), "cross": stacked cross KV}."""
     x = jnp.take(params["embed/w"], tokens, axis=0).astype(ec.compute_dtype)
     p0 = caches["self"]["pos"][0]
-    x = x + jax.lax.dynamic_slice_in_dim(params["pos_dec/w"], p0, 1
-                                         ).astype(ec.compute_dtype)[None]
+    if p0.ndim:  # per-request decode positions (continuous batching)
+        x = x + jnp.take(params["pos_dec/w"], p0, axis=0
+                         ).astype(ec.compute_dtype)[:, None]
+    else:
+        x = x + jax.lax.dynamic_slice_in_dim(params["pos_dec/w"], p0, 1
+                                             ).astype(ec.compute_dtype)[None]
     stacked = subtree(params, "decoder/layers")
 
     def body(h, xs):

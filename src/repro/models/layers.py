@@ -167,11 +167,16 @@ def attention(p: Params, x: jax.Array, cfg: ArchConfig, exec_cfg: ExecConfig,
     is_cross = kv_x is not None or (cache is not None and "pos" not in cache)
     use_rope = mask_kind == "causal" and not is_cross
     if use_rope:
-        if positions is None:
-            pos_q = jnp.arange(s)[None, :] if cache is None else \
-                jnp.full((1, 1), cache["pos"], jnp.int32)
-        else:
+        if positions is not None:
             pos_q = positions
+        elif cache is None:
+            pos_q = jnp.arange(s)[None, :]
+        elif cache["pos"].ndim == 1:
+            # per-request decode positions (continuous batching): every
+            # row rotates by its own offset
+            pos_q = cache["pos"][:, None]
+        else:
+            pos_q = jnp.full((1, 1), cache["pos"], jnp.int32)
         cos_q, sin_q = rope_freqs(pos_q, hd, cfg.rope_theta)
         q = apply_rope(q, cos_q, sin_q)
 
@@ -198,9 +203,10 @@ def attention(p: Params, x: jax.Array, cfg: ArchConfig, exec_cfg: ExecConfig,
         new_cache = cache
     else:  # self-attention decode
         pos = cache["pos"]
+        vec = pos.ndim == 1  # per-request positions (continuous batching)
         if use_rope:
-            cos_k, sin_k = rope_freqs(jnp.full((1, 1), pos, jnp.int32), hd,
-                                      cfg.rope_theta)
+            pos_k = pos[:, None] if vec else jnp.full((1, 1), pos, jnp.int32)
+            cos_k, sin_k = rope_freqs(pos_k, hd, cfg.rope_theta)
             k = apply_rope(k, cos_k, sin_k)
         new_cache = {"pos": pos + 1}
         if cache["k"].dtype == jnp.int8:   # quantized KV cache
@@ -218,7 +224,8 @@ def attention(p: Params, x: jax.Array, cfg: ArchConfig, exec_cfg: ExecConfig,
             vd = cv = cache_write(cache["v"], v, pos, 1, exec_cfg)
             new_cache.update(k=ck, v=cv)
         qg = q.reshape(b_, s, kv, g, hd).astype(kd.dtype)
-        ctx = _sdpa(qg, kd, vd, cfg, "full", kv_valid_len=pos + 1,
+        ctx = _sdpa(qg, kd, vd, cfg, "full",
+                    kv_valid_len=(pos[:, None] + 1) if vec else pos + 1,
                     acc_dtype=kd.dtype)
 
     ctx = ctx.reshape(b_, s, h, hd)
@@ -228,8 +235,22 @@ def attention(p: Params, x: jax.Array, cfg: ArchConfig, exec_cfg: ExecConfig,
 
 def cache_write(buf: jax.Array, upd: jax.Array, pos: jax.Array,
                 seq_dim: int, exec_cfg: ExecConfig) -> jax.Array:
-    """Write a one-token update into the cache at `pos` along `seq_dim`."""
+    """Write a one-token update into the cache at `pos` along `seq_dim`.
+
+    pos may be a scalar (lock-step decode) or a (B,) vector of per-request
+    positions (continuous batching); the vector form always lowers to the
+    one-hot masked write because DUS cannot express per-row start offsets.
+    Both forms write the same values bitwise: `where` selects exact
+    operands, so only the untouched-row representation differs."""
     upd = upd.astype(buf.dtype)
+    if getattr(pos, "ndim", 0) == 1:
+        assert upd.shape[seq_dim] == 1, "one-token decode writes only"
+        oh = jnp.arange(buf.shape[seq_dim])[None, :] == pos[:, None]  # (B,S)
+        shape = [1] * buf.ndim
+        shape[0] = buf.shape[0]
+        shape[seq_dim] = buf.shape[seq_dim]
+        oh = oh.reshape(shape)
+        return jnp.where(oh, jnp.broadcast_to(upd, buf.shape), buf)
     if exec_cfg.cache_update == "dus":
         start = [0] * buf.ndim
         start[seq_dim] = pos
@@ -346,8 +367,9 @@ def mla_attention(p: Params, x: jax.Array, cfg: ArchConfig,
     else:
         # absorbed decode: score via latent cache, never expand K/V
         pos = cache["pos"]
-        cos, sin = rope_freqs(jnp.full((1, 1), pos, jnp.int32), dr,
-                              cfg.rope_theta)
+        vec = pos.ndim == 1  # per-request positions (continuous batching)
+        pos_r = pos[:, None] if vec else jnp.full((1, 1), pos, jnp.int32)
+        cos, sin = rope_freqs(pos_r, dr, cfg.rope_theta)
         q_rope = apply_rope(q_rope, cos, sin)
         k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0]
         lat_c = cache_write(cache["latent"], latent, pos, 1, exec_cfg)
@@ -358,8 +380,10 @@ def mla_attention(p: Params, x: jax.Array, cfg: ArchConfig,
                              preferred_element_type=jnp.float32)
                   + jnp.einsum("bqhr,bsr->bhqs", q_rope, kr_c,
                                preferred_element_type=jnp.float32)) * scale
-        valid = jnp.arange(lat_c.shape[1])[None, :] <= pos
-        scores = jnp.where(valid[None, None], scores, NEG_INF)
+        valid = jnp.arange(lat_c.shape[1])[None, :] <= (
+            pos[:, None] if vec else pos)
+        scores = jnp.where(valid[:, None, None] if vec else valid[None, None],
+                           scores, NEG_INF)
         w = jax.nn.softmax(scores, -1)
         ctx_lat = jnp.einsum("bhqs,bsl->bqhl", w.astype(lat_c.dtype), lat_c)
         wv = p["wkv_up"][..., dn:]  # (kl, h, dv)

@@ -140,6 +140,11 @@ def pad_caches(caches, extra: int):
 
     def leaf(path, x):
         key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        # enc-dec cross K/V is written once at prefill and never grows;
+        # cross attention has no valid-length mask, so padding it with
+        # zero rows would CHANGE the softmax (zero scores still weigh in)
+        if any(getattr(p, "key", None) == "cross" for p in path):
+            return x
         if key in seq_keys and x.ndim >= 3:
             # seq dim is the one right after batch: (..., B, S, ...) — for
             # stacked caches (L, B, S, ...) that is ndim-3 for k/v (4d tail)

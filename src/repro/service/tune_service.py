@@ -33,13 +33,19 @@ from repro.core.remote import RpcServer, request
 class TuneService:
     def __init__(self, memo_dir: str, *, host: str = "127.0.0.1",
                  port: int = 0, workers: int = 1,
-                 hosts: Optional[Tuple[str, ...]] = None):
+                 hosts: Optional[Tuple[str, ...]] = None,
+                 gc_max_bytes: Optional[int] = None):
         self.memo_dir = memo_dir
         self.workers = max(1, int(workers))
         self.hosts = tuple(hosts) if hosts else None
         self.store = MemoStore(memo_dir)
+        self.gc_max_bytes = gc_max_bytes
+        self.last_gc = None
         self._lock = threading.Lock()
         self.n_queries = 0
+        if gc_max_bytes is not None:
+            # bound a pre-existing store before serving the first query
+            self.last_gc = self.store.gc(gc_max_bytes)
         self.server = RpcServer(
             {"tune": self._tune, "stats": self._stats},
             host=host, port=port)
@@ -50,7 +56,9 @@ class TuneService:
                 "unit_hits": self.store.unit_hits,
                 "unit_misses": self.store.unit_misses,
                 "report_hits": self.store.report_hits,
-                "memo_dir": self.memo_dir}
+                "memo_dir": self.memo_dir,
+                "gc_max_bytes": self.gc_max_bytes,
+                "last_gc": self.last_gc}
 
     def _tune(self, payload: bytes) -> bytes:
         from repro.core.tuner import MistTuner
@@ -69,6 +77,11 @@ class TuneService:
             self.store.unit_hits += qs.unit_hits
             self.store.unit_misses += qs.unit_misses
             self.store.report_hits += qs.report_hits
+            if self.gc_max_bytes is not None:
+                # evict oldest-access entries the query pushed past the
+                # cap — under the lock, so a gc never races a flush of
+                # the same query's frontiers
+                self.last_gc = self.store.gc(self.gc_max_bytes)
         return pickle.dumps(rep, protocol=pickle.HIGHEST_PROTOCOL)
 
     def serve_forever(self):
@@ -105,10 +118,15 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.add_argument("--hosts", default=None,
                    help="comma-separated tune_worker host:port list to "
                         "fan sweeps out to")
+    p.add_argument("--gc-max-bytes", type=int, default=None,
+                   help="prune the memo store to this many bytes "
+                        "(oldest-access entries first) at startup and "
+                        "after every query")
     args = p.parse_args(argv)
     hosts = tuple(h for h in (args.hosts or "").split(",") if h) or None
     svc = TuneService(args.memo_dir, host=args.host, port=args.port,
-                      workers=args.workers, hosts=hosts)
+                      workers=args.workers, hosts=hosts,
+                      gc_max_bytes=args.gc_max_bytes)
     print(f"tune-service listening on {svc.addr} (memo: {args.memo_dir})",
           flush=True)
     try:

@@ -1,0 +1,13 @@
+"""Continuous-batching serve engine over a paged KV cache
+(docs/continuous-batching.md).
+
+- :mod:`repro.serving.pages` — page-pool allocator + cache-tree paging
+- :mod:`repro.serving.scheduler` — per-step admit/extend/preempt/retire
+- :mod:`repro.serving.engine` — the engine driving the paged decode step
+"""
+from repro.serving.engine import ContinuousBatchingEngine
+from repro.serving.pages import PagedKvAllocator, pages_for
+from repro.serving.scheduler import ContinuousScheduler, ServeRequest
+
+__all__ = ["ContinuousBatchingEngine", "PagedKvAllocator",
+           "ContinuousScheduler", "ServeRequest", "pages_for"]

@@ -1,0 +1,232 @@
+"""Paged KV-cache allocation (docs/continuous-batching.md).
+
+Two halves, both jax-optional at import time:
+
+* ``PagedKvAllocator`` — pure-python page accounting over ONE shared
+  pool id space: a free list, per-request block lists, a watermark
+  admission gate, and a high-water mark.  Invariants (property-tested in
+  tests/test_serving_engine.py):
+
+    - a page is owned by at most one live request (no aliasing);
+    - ``release``/preemption returns every owned page to the free list;
+    - ``used + free == total`` at every point;
+    - a request's page count is exactly ``ceil(covered_rows / page_size)``.
+
+* cache-tree classification and pool construction — the bridge between
+  the abstract cache pytree (``model.init_caches``) and the paged engine
+  state.  A leaf is PAGED iff it is a KV-sequence leaf
+  (``cache_layout.SEQ_CACHE_KEYS``) whose sequence extent is the decode
+  horizon — established by probing ``jax.eval_shape`` with batch and
+  max_len perturbed separately, so leading stacked dims that happen to
+  equal the batch size can never be mistaken for it.  Paged leaves
+  (lead, B, S, tail) become pools (lead, B*npp + 1, page_size, tail)
+  whose last page is a shared TRASH page (inactive slots' writes land
+  there); ``pos`` leaves widen to per-request vectors (orig_shape + (B,));
+  everything else (SSM/mLSTM state, conv windows, enc-dec cross KV) stays
+  slot-resident at batch = slots.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.lowering.cache_layout import SEQ_CACHE_KEYS
+
+
+def pages_for(rows: int, page_size: int) -> int:
+    """Pages needed to cover ``rows`` cache rows."""
+    if rows <= 0:
+        return 0
+    return -(-rows // page_size)
+
+
+class PagedKvAllocator:
+    """Fixed-size page-pool accounting with watermark admission.
+
+    ``num_pages`` counts DATA pages only (the engine's shared trash page
+    is outside this id space).  Pages are handed out lowest-id-first so
+    traces replay deterministically.
+    """
+
+    def __init__(self, *, num_pages: int, page_size: int,
+                 watermark: int = 0):
+        if num_pages <= 0 or page_size <= 0:
+            raise ValueError("num_pages and page_size must be positive")
+        if watermark < 0 or watermark >= num_pages:
+            raise ValueError(f"watermark {watermark} must be in "
+                             f"[0, num_pages)")
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        self.watermark = int(watermark)
+        self._free: List[int] = list(range(num_pages))  # ascending
+        self._owned: Dict[Any, List[int]] = {}
+        self.highwater = 0  # max pages ever simultaneously owned
+
+    # -- accounting ----------------------------------------------------------
+
+    @property
+    def free(self) -> int:
+        return len(self._free)
+
+    @property
+    def used(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def pages(self, rid) -> Tuple[int, ...]:
+        return tuple(self._owned[rid])
+
+    def owners(self) -> Tuple[Any, ...]:
+        return tuple(self._owned)
+
+    # -- admission / growth / release ---------------------------------------
+
+    def can_admit(self, rows: int, ignore_watermark: bool = False) -> bool:
+        """Admission gate: granting ``rows`` of coverage must leave at
+        least ``watermark`` pages free (headroom for in-flight decodes
+        to extend without immediate preemption).  ``ignore_watermark``
+        drops the reserve to zero — the engine uses it when it is
+        otherwise idle, where holding a request back can only deadlock."""
+        floor = 0 if ignore_watermark else self.watermark
+        return self.free - pages_for(rows, self.page_size) >= floor
+
+    def admit(self, rid, rows: int,
+              ignore_watermark: bool = False) -> List[int]:
+        """Allocate coverage for ``rows`` to a new request.  The caller
+        must gate on :meth:`can_admit`; admitting past the watermark is
+        a bug, not a preemption trigger."""
+        if rid in self._owned:
+            raise ValueError(f"request {rid!r} already admitted")
+        if not self.can_admit(rows, ignore_watermark):
+            raise RuntimeError(f"admit({rid!r}, rows={rows}) below "
+                               f"watermark {self.watermark}")
+        n = pages_for(rows, self.page_size)
+        got = [self._free.pop(0) for _ in range(n)]
+        self._owned[rid] = got
+        self.highwater = max(self.highwater, self.used)
+        return list(got)
+
+    def extend(self, rid, rows: int) -> Optional[List[int]]:
+        """Grow ``rid``'s coverage to ``rows`` total.  Extension may dip
+        below the watermark (the watermark gates ADMISSION only); returns
+        the newly granted page ids, or None when the pool is exhausted —
+        the caller preempts and retries."""
+        owned = self._owned[rid]
+        need = pages_for(rows, self.page_size) - len(owned)
+        if need <= 0:
+            return []
+        if need > self.free:
+            return None
+        got = [self._free.pop(0) for _ in range(need)]
+        owned.extend(got)
+        self.highwater = max(self.highwater, self.used)
+        return list(got)
+
+    def release(self, rid) -> List[int]:
+        """Retire or preempt: every owned page returns to the free list."""
+        pages = self._owned.pop(rid)
+        self._free.extend(pages)
+        self._free.sort()
+        return list(pages)
+
+
+# ---------------------------------------------------------------------------
+# Cache-tree classification and paged engine state
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LeafSpec:
+    """How one cache leaf maps into the paged engine state."""
+    key: str                       # trailing pytree key
+    shape: Tuple[int, ...]         # dense shape at (slots, max_len)
+    paged: bool                    # carved into a page pool
+    is_pos: bool                   # widened to a per-request vector
+    bdim: Optional[int]            # batch dim (probe-established)
+
+
+def classify_cache_tree(init_caches, slots: int, max_len: int,
+                        cache_dtype=None) -> List[LeafSpec]:
+    """Probe ``init_caches`` under jax.eval_shape to classify every leaf,
+    in ``jax.tree.leaves`` order.
+
+    Batch and sequence dims are found by PERTURBING the respective
+    argument and diffing shapes — immune to a stacked lead dim that
+    happens to equal the batch size (the by-value hazard the symbolic
+    layout tolerates but a real allocator cannot).
+    """
+    import jax
+    import jax.numpy as jnp
+    cdt = jnp.bfloat16 if cache_dtype is None else cache_dtype
+    base = jax.eval_shape(lambda: init_caches(slots, max_len, cdt))
+    bpro = jax.eval_shape(lambda: init_caches(slots + 1, max_len, cdt))
+    spro = jax.eval_shape(lambda: init_caches(slots, max_len + 1, cdt))
+    flat = jax.tree_util.tree_leaves_with_path(base)
+    bflat = jax.tree_util.tree_leaves(bpro)
+    sflat = jax.tree_util.tree_leaves(spro)
+    specs = []
+    for (path, leaf), lb, ls in zip(flat, bflat, sflat):
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        bdims = [i for i, (a, b) in enumerate(zip(leaf.shape, lb.shape))
+                 if a != b]
+        sdims = [i for i, (a, b) in enumerate(zip(leaf.shape, ls.shape))
+                 if a != b]
+        bdim = bdims[0] if len(bdims) == 1 else None
+        paged = (key in SEQ_CACHE_KEYS and bdim is not None
+                 and (bdim + 1) in sdims)
+        if paged and bdim != 1:
+            raise NotImplementedError(
+                f"paged leaf {key!r} has batch dim {bdim}; the paged "
+                f"engine expects exactly one stacked lead dim")
+        specs.append(LeafSpec(key=key, shape=tuple(int(d) for d in
+                                                   leaf.shape),
+                              paged=paged, is_pos=(key == "pos"),
+                              bdim=bdim))
+    return specs
+
+
+def data_pages(slots: int, max_len: int, page_size: int) -> int:
+    """Data pages in every pool: full coverage for every slot.  Page id
+    ``data_pages`` (one past the end) is the shared trash page."""
+    if max_len % page_size:
+        raise ValueError(f"page_size {page_size} must divide max_len "
+                         f"{max_len} (dense gathered length must equal "
+                         f"the contiguous cache length)")
+    return slots * (max_len // page_size)
+
+
+def init_paged_state(init_caches, specs: List[LeafSpec], slots: int,
+                     max_len: int, page_size: int, cache_dtype=None):
+    """Concrete engine state: the ``init_caches`` tree with paged leaves
+    replaced by zeroed pools and ``pos`` leaves widened to int32
+    per-request vectors.  Non-paged leaves keep their REAL initial values
+    (mLSTM's ``m`` stabilizer initializes to a large negative, not 0)."""
+    import jax
+    import jax.numpy as jnp
+    cdt = jnp.bfloat16 if cache_dtype is None else cache_dtype
+    dense = init_caches(slots, max_len, cdt)
+    treedef = jax.tree.structure(dense)
+    flat = jax.tree.leaves(dense)
+    npp = max_len // page_size
+    pool_pages = data_pages(slots, max_len, page_size) + 1  # + trash
+    out = []
+    for leaf, spec in zip(flat, specs):
+        if spec.paged:
+            lead, tail = leaf.shape[0], leaf.shape[3:]
+            out.append(jnp.zeros((lead, pool_pages, page_size) + tail,
+                                 leaf.dtype))
+        elif spec.is_pos:
+            out.append(jnp.zeros(leaf.shape + (slots,), jnp.int32))
+        else:
+            out.append(leaf)
+    del dense, flat
+    bt = jnp.full((slots, npp), pool_pages - 1, jnp.int32)  # all trash
+    return jax.tree.unflatten(treedef, out), bt
+
+
+def paged_state_bytes(state, block_table) -> int:
+    """Exact bytes the engine allocated (pools + slot state + block
+    table) — compared bitwise against ``concrete_paged_cache_bytes`` at
+    dp == tp == 1 in the contract tests."""
+    import jax
+    return int(sum(leaf.nbytes for leaf in jax.tree.leaves(state))
+               + block_table.nbytes)

@@ -207,3 +207,98 @@ def make_serve_step(model: Model, plan: Optional[Plan] = None,
                      donate_argnums=(2,) if donate else ())
     return CompiledStep(fn=jit_fn, state_shardings=None,
                         batch_shardings=cache_sh, exec_cfg=ec)
+
+
+def make_paged_serve_step(model: Model, plan: Optional[Plan] = None,
+                          mesh: Optional[Mesh] = None, *, slots: int,
+                          max_len: int, page_size: int, donate: bool = True,
+                          lowered: Optional[LoweredPlan] = None
+                          ) -> CompiledStep:
+    """One-token decode for the continuous-batching engine
+    (docs/continuous-batching.md): KV lives in page pools, gathered into
+    dense per-slot views through a block table, decoded with per-request
+    position vectors, and the written row scattered back.
+
+    Token identity with the contiguous path is BY CONSTRUCTION: gathered
+    rows below each slot's position are the exact pages the contiguous
+    cache would hold, rows at-or-beyond are masked to the zeros a fresh
+    contiguous cache holds — so the dense tree entering ``decode_fn`` is
+    bitwise the contiguous cache state, and per-row batch invariance does
+    the rest.  Inactive slots carry pos = 0 / all-trash block tables:
+    their masked rows are all-zero, their scattered writes land on the
+    shared trash page, their logits are ignored by the engine.
+    """
+    from repro.serving.pages import classify_cache_tree
+    if lowered is None and (plan is None or mesh is None):
+        raise ValueError("make_paged_serve_step needs either lowered= or "
+                         "(plan, mesh)")
+    low = lowered or lower_plan(model.cfg, None, plan, mesh)
+    rules = low.shard_rules()
+    if max_len % page_size:
+        raise ValueError(f"page_size {page_size} must divide max_len "
+                         f"{max_len}")
+    npp = max_len // page_size
+
+    kv_dtype = low.plan.kv_cache_dtype
+    cache_dtype = jnp.int8 if kv_dtype == "int8" else jnp.bfloat16
+    specs = classify_cache_tree(model.init_caches, slots, max_len,
+                                cache_dtype)
+    caches_sds = jax.eval_shape(
+        lambda: model.init_caches(slots, max_len, cache_dtype))
+    treedef = jax.tree.structure(caches_sds)
+    # vector positions force cache_write's one-hot branch regardless of
+    # the mode, so the base serve exec config is used as-is
+    ec = low.serve_exec_cfg
+
+    pos_ix = next((i for i, s in enumerate(specs) if s.is_pos), None)
+
+    def _pos_vec(flat):
+        # all pos leaves broadcast ONE per-request vector (engine
+        # invariant); read it off the first one
+        return flat[pos_ix].reshape(-1, slots)[0]
+
+    def _gather(pool, block_table, pos_vec):
+        lead, tail = pool.shape[0], pool.shape[3:]
+        g = jnp.take(pool, block_table, axis=1)        # (lead,B,npp,ps,*t)
+        g = g.reshape((lead, slots, max_len) + tail)
+        # rows at-or-beyond each request's position read as the zeros a
+        # fresh contiguous cache holds — page recycling and the trash
+        # page never leak garbage into the dense view
+        valid = jnp.arange(max_len)[None, :] < pos_vec[:, None]  # (B,S)
+        valid = valid.reshape((1, slots, max_len) + (1,) * len(tail))
+        return jnp.where(valid, g, jnp.zeros((), pool.dtype))
+
+    def _scatter(pool, dense_new, block_table, pos_vec):
+        # the decode step wrote exactly row pos_vec[b] of slot b; copy it
+        # into the owning page (inactive/overflowing slots hit the trash
+        # page via the block-table fill and the page-index clamp)
+        lead, tail = pool.shape[0], pool.shape[3:]
+        row = jnp.clip(pos_vec, 0, max_len - 1)                    # (B,)
+        idx = row.reshape((1, slots, 1) + (1,) * len(tail))
+        rows = jnp.take_along_axis(dense_new, idx, axis=2)
+        rows = jnp.squeeze(rows, axis=2)                  # (lead,B,*tail)
+        page = jnp.minimum(row // page_size, npp - 1)
+        tgt = (block_table[jnp.arange(slots), page] * page_size
+               + row % page_size)                                  # (B,)
+        flat = pool.reshape((lead, pool.shape[1] * page_size) + tail)
+        return flat.at[:, tgt].set(rows).reshape(pool.shape)
+
+    def step(params, tokens, state, block_table):
+        with use_rules(rules):
+            flat = jax.tree.leaves(state)
+            pos_vec = _pos_vec(flat) if pos_ix is not None else None
+            dense = [
+                _gather(leaf, block_table, pos_vec) if spec.paged else leaf
+                for leaf, spec in zip(flat, specs)]
+            caches = jax.tree.unflatten(treedef, dense)
+            logits, new_caches = model.decode_fn(params, tokens, caches, ec)
+            new_flat = jax.tree.leaves(new_caches)
+            out = [
+                _scatter(leaf, new, block_table, pos_vec) if spec.paged
+                else new
+                for leaf, new, spec in zip(flat, new_flat, specs)]
+            return logits, jax.tree.unflatten(treedef, out)
+
+    jit_fn = jax.jit(step, donate_argnums=(2,) if donate else ())
+    return CompiledStep(fn=jit_fn, state_shardings=None,
+                        batch_shardings=None, exec_cfg=ec)

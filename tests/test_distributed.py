@@ -369,6 +369,48 @@ class TestMemoStore:
         assert memo_store.digest(0.1 + 0.2) != memo_store.digest(0.3)
         assert memo_store.digest((1,)) != memo_store.digest(1)
 
+    def test_gc_prunes_oldest_access_first(self, tmp_path):
+        """gc(max_bytes) evicts by last ACCESS, not write order: a _get
+        hit refreshes the entry's timestamp, so warm entries outlive
+        cold-but-newer ones.  Evictions are whole-entry unlinks and the
+        pass is idempotent at the cap."""
+        import os
+        store = MemoStore(str(tmp_path / "memo"))
+        keys = [ch * 64 for ch in "abcd"]
+        for k in keys:
+            store._put("units", k, b"payload")
+        for i, k in enumerate(keys):       # ages: a oldest ... d newest
+            t = 1_000_000 + i * 100
+            os.utime(store._path("units", k), (t, t))
+        # a hit on the OLDEST-written entry refreshes it to now
+        assert store._get("units", keys[0]) == b"payload"
+        size = os.path.getsize(store._path("units", keys[0]))
+        stats = store.gc(max_bytes=2 * size)
+        assert stats == {"scanned": 4, "removed": 2,
+                         "bytes_before": 4 * size,
+                         "bytes_after": 2 * size}
+        assert store._get("units", keys[1]) is None    # oldest access
+        assert store._get("units", keys[2]) is None
+        assert store._get("units", keys[0]) == b"payload"   # refreshed
+        assert store._get("units", keys[3]) == b"payload"   # newest
+        assert store.gc(max_bytes=2 * size)["removed"] == 0  # idempotent
+        with pytest.raises(ValueError):
+            store.gc(max_bytes=-1)
+
+    def test_gc_bounds_a_real_store(self, tmp_path):
+        """gc(0) empties a store a real tune populated; the next query
+        recomputes cleanly (an evicted entry is a miss, never an error)."""
+        d = str(tmp_path / "memo")
+        MistTuner(_spec(memo_dir=d)).tune()
+        store = MemoStore(d)
+        stats = store.gc(max_bytes=0)
+        assert stats["removed"] == stats["scanned"] > 0
+        assert stats["bytes_after"] == 0
+        assert store.count("units") == 0 and store.count("reports") == 0
+        rep = MistTuner(_spec(memo_dir=d)).tune()
+        assert not rep.from_memo
+        assert _report_key(rep) == _report_key(MistTuner(_spec()).tune())
+
 
 # -- persistent tune service --------------------------------------------------
 
@@ -388,6 +430,39 @@ class TestTuneService:
             assert _report_key(r2) == _report_key(ser)
             stats = request(svc.addr, "stats")
             assert stats["queries"] == 2 and stats["report_hits"] == 1
+        finally:
+            svc.shutdown()
+
+    def test_service_gc_zero_cap_empties_store(self, tmp_path):
+        """--gc-max-bytes 0: every entry is evicted after each query, so
+        the warm path never hits — but answers stay correct."""
+        d = str(tmp_path / "memo")
+        svc = TuneService(d, gc_max_bytes=0)
+        svc.start_in_thread()
+        try:
+            r1 = tune_remote(_spec(), svc.addr)
+            assert not r1.from_memo
+            stats = request(svc.addr, "stats")
+            assert stats["gc_max_bytes"] == 0
+            assert stats["last_gc"]["bytes_after"] == 0
+            store = MemoStore(d)
+            assert store.count("units") == 0
+            assert store.count("reports") == 0
+            r2 = tune_remote(_spec(), svc.addr)      # recomputes cleanly
+            assert not r2.from_memo
+            assert _report_key(r2) == _report_key(r1)
+        finally:
+            svc.shutdown()
+
+    def test_service_gc_generous_cap_keeps_warm_path(self, tmp_path):
+        svc = TuneService(str(tmp_path / "memo"), gc_max_bytes=1 << 30)
+        svc.start_in_thread()
+        try:
+            tune_remote(_spec(), svc.addr)
+            r2 = tune_remote(_spec(), svc.addr)
+            assert r2.from_memo                      # nothing evicted
+            stats = request(svc.addr, "stats")
+            assert stats["last_gc"]["removed"] == 0
         finally:
             svc.shutdown()
 
